@@ -1,0 +1,65 @@
+"""Paper App. J: comparison of randomized frame classes.
+
+Empirically measures, per frame family (sub-Gaussian / Haar orthonormal /
+randomized Hadamard):
+  * frame bounds A, B (min/max eigenvalue of S Sᵀ),
+  * the democratic-embedding flatness ‖x_d‖∞·√N/‖y‖₂ (≈ K_u),
+  * the near-democratic flatness ‖x_nd‖∞·√N/‖y‖₂ (the √log N factor),
+  * NDSC quantization error at R = 4.
+
+Validates App. J's ordering: orthonormal/Hadamard are exactly Parseval
+(A = B = 1); sub-Gaussian is approximately Parseval; Hadamard NDE matches
+orthonormal NDE while costing O(n log n) adds.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import gaussian_cubed, make_codec, print_table
+from repro.core import embeddings as E
+from repro.core import frames as F
+
+
+def run(n: int = 256, aspect: float = 2.0, trials: int = 10, seed: int = 0):
+    nn = int(n * aspect)
+    n_had = F.next_pow2(nn)
+    rows = []
+    for kind, N in (("subgaussian", nn), ("haar", nn), ("hadamard", n_had)):
+        a_min, b_max, flat_d, flat_nd, qerr = [], [], [], [], []
+        for t in range(trials):
+            key = jax.random.key(seed + t)
+            frame = F.make_frame(kind, key, n, N)
+            s_mat = F.dense_matrix(frame)
+            eigs = np.linalg.eigvalsh(np.asarray(s_mat @ s_mat.T))
+            a_min.append(eigs.min())
+            b_max.append(eigs.max())
+            y = gaussian_cubed(jax.random.fold_in(key, 1), (n,))
+            ynorm = float(jnp.linalg.norm(y))
+            if kind != "subgaussian":     # DE needs (approx) Parseval
+                x_d = E.democratic(frame, y)
+                flat_d.append(float(jnp.max(jnp.abs(x_d)))
+                              * np.sqrt(N) / ynorm)
+            x_nd = E.near_democratic(frame, y)
+            flat_nd.append(float(jnp.max(jnp.abs(x_nd)))
+                           * np.sqrt(N) / ynorm)
+            codec = make_codec(kind if kind != "subgaussian" else "haar",
+                               n, 4.0, aspect=aspect, seed=seed + t)
+            y_hat = codec.roundtrip(y, jax.random.fold_in(key, 2))
+            qerr.append(float(jnp.linalg.norm(y_hat - y)) / ynorm)
+        rows.append([
+            kind, f"{np.mean(a_min):.3f}", f"{np.mean(b_max):.3f}",
+            (f"{np.mean(flat_d):.2f}" if flat_d else "—"),
+            f"{np.mean(flat_nd):.2f}",
+            f"{np.mean(qerr):.4f}",
+        ])
+    print_table(
+        f"App. J — frame classes (n={n}, λ={aspect}, {trials} trials)",
+        ["frame", "A (min eig)", "B (max eig)", "K̂_u (DE)",
+         "‖x_nd‖∞√N/‖y‖ (NDE)", "NDSC err @R=4"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

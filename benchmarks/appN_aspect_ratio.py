@@ -1,0 +1,47 @@
+"""Paper App. N: why λ = N/n should be as close to 1 as possible.
+
+Two curves per embedding kind, sweeping the embedding dimension N at fixed
+n and a FIXED total bit budget nR:
+  * ‖x‖∞·√N/‖y‖₂   — the flatness gain from a larger subspace (decreases),
+  * ‖y − Q(y)‖/‖y‖ — the end-to-end quantization error (the budget dilution
+    R → nR/N wins: error grows with N, so pick N ≈ n).
+
+Reproduces Figs. 8–12 of the paper's App. N numerically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import gaussian_cubed, print_table
+from repro.core.coding import Codec, CodecConfig
+from repro.core import frames as F
+
+
+def run(n: int = 96, R: float = 4.0, trials: int = 10, seed: int = 0,
+        embed_dims=(128, 256, 512, 1024, 2048)):
+    rows = []
+    for N in embed_dims:
+        lam_eff = N / n
+        flat, err = [], []
+        for t in range(trials):
+            key = jax.random.key(seed + t)
+            frame = F.hadamard_frame(key, n, N)
+            y = gaussian_cubed(jax.random.fold_in(key, 1), (n,))
+            x = frame.apply_t(y)
+            flat.append(float(jnp.max(jnp.abs(x))) * (N ** 0.5)
+                        / float(jnp.linalg.norm(y)))
+            codec = Codec(frame, CodecConfig(bits_per_dim=R))
+            y_hat = codec.roundtrip(y, jax.random.fold_in(key, 2))
+            err.append(float(jnp.linalg.norm(y_hat - y)
+                             / jnp.linalg.norm(y)))
+        rows.append([f"{lam_eff:.2f}", N, f"{sum(flat)/trials:.3f}",
+                     f"{R/lam_eff:.2f}", f"{sum(err)/trials:.4f}"])
+    print_table(
+        f"App. N — aspect-ratio trade-off (n={n}, budget nR = {n*R:.0f} bits)",
+        ["λ=N/n", "N", "‖x‖∞√N/‖y‖", "bits/emb-dim", "roundtrip err"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

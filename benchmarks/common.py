@@ -1,0 +1,58 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.coding import Codec, CodecConfig
+from repro.core.embeddings import EmbeddingSpec
+from repro.core import frames as F
+
+
+def gaussian_cubed(key, shape):
+    """The paper's heavy-tailed test vectors (§5): N(0,1)³ element-wise."""
+    return jax.random.normal(key, shape) ** 3
+
+
+def student_t(key, shape, df=1.0):
+    return jax.random.t(key, df=df, shape=shape)
+
+
+def make_codec(kind: str, n: int, R: float, *, dithered=False,
+               embedding="near_democratic", aspect=1.0, seed=0) -> Codec:
+    if kind == "hadamard":
+        N = F.next_pow2(n)
+    else:
+        N = max(n, int(round(aspect * n)))
+    frame = F.make_frame(kind, jax.random.key(seed), n, N)
+    return Codec(frame, CodecConfig(
+        bits_per_dim=R, dithered=dithered,
+        embedding=EmbeddingSpec(kind=embedding)))
+
+
+def normalized_error(roundtrip, y, key, trials=50):
+    keys = jax.random.split(key, trials)
+    errs = jax.vmap(lambda k: jnp.linalg.norm(roundtrip(k, y) - y)
+                    / jnp.linalg.norm(y))(keys)
+    return float(jnp.mean(errs))
+
+
+def timed(fn, *args, repeats=5):
+    fn(*args)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats
+
+
+def print_table(title, header, rows):
+    print(f"\n== {title} ==")
+    widths = [max(len(str(r[i])) for r in [header] + rows)
+              for i in range(len(header))]
+    fmt = "  ".join(f"{{:<{w}}}" for w in widths)
+    print(fmt.format(*header))
+    for r in rows:
+        print(fmt.format(*[str(x) for x in r]))

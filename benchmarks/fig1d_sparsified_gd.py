@@ -1,0 +1,71 @@
+"""Paper Fig. 1d: ℓ2-regularized least squares with sparsified + 1-bit
+quantized gradients at an effective R = 0.5 bits/dim, with vs without NDE.
+
+Protocol: the SAME compressor (random-50% sparsification → 1-bit ‖·‖∞
+nearest-neighbour quantization, error feedback) is applied either to the raw
+gradient (vanilla) or to its near-democratic embedding (NDE, Thm. 4
+composition). The paper uses MNIST (784-dim); MNIST does not ship offline,
+so the protocol runs on a heavy-tailed synthetic 784-dim problem (noted in
+EXPERIMENTS.md). Claim to validate: the NDE-wrapped scheme converges markedly
+faster — heavy-tailed gradients are exactly where flattening pays.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import print_table
+from repro.core import frames as F
+from repro.core import optim as O
+from repro.core import quantizers as q
+
+
+def _sparse1bit(k, g):
+    """rand-50% + 1-bit NN quantization on g/‖g‖∞ (R = 0.5 bits/dim)."""
+    mask = q.subsample_mask(k, g.shape, 0.5)
+    scale = jnp.max(jnp.abs(g))
+    return q.uniform_quantize(g / jnp.maximum(scale, 1e-30), 2) * scale * mask
+
+
+def run(n: int = 784, m: int = 500, steps: int = 60, lam: float = 0.05,
+        seed: int = 0):
+    key = jax.random.key(seed)
+    k1, k2 = jax.random.split(key)
+    # heavy-tailed design (Gaussian³ features — the paper's §5 protocol)
+    feats = jax.random.normal(k1, (m, n)) ** 3
+    feats = feats / jnp.linalg.norm(feats, axis=0, keepdims=True)
+    y_lab = jnp.sign(jax.random.normal(k2, (m,)))
+    h = feats.T @ feats / m + lam * jnp.eye(n)
+    rhs = feats.T @ y_lab / m
+    x_star = jnp.linalg.solve(h, rhs)
+    eigs = jnp.linalg.eigvalsh(h)
+    alpha = O.alpha_star(float(eigs[-1]), float(eigs[0]))
+    grad = lambda x: h @ x - rhs
+    x0 = jnp.zeros((n,))
+    d0 = float(jnp.linalg.norm(x_star))
+
+    t_v = O.dqgd(grad, x0, _sparse1bit, alpha, steps, x_star=x_star)
+
+    frame = F.make_frame("haar", jax.random.key(1), n, n)
+
+    def nde_wrapped(k, g):                      # Thm. 4 composition
+        return frame.apply(_sparse1bit(k, frame.apply_t(g)))
+
+    t_n = O.dqgd(grad, x0, nde_wrapped, alpha, steps, x_star=x_star)
+    t_gd = O.gd(grad, x0, alpha, steps, x_star=x_star)
+
+    rows = [
+        ["rand-50% + 1-bit (vanilla)",
+         f"{float(t_v.dist_history[-1]) / d0:.3e}"],
+        ["rand-50% + 1-bit + NDE (Thm. 4)",
+         f"{float(t_n.dist_history[-1]) / d0:.3e}"],
+        ["unquantized GD", f"{float(t_gd.dist_history[-1]) / d0:.3e}"],
+    ]
+    print_table(
+        f"Fig. 1d — ‖x_T − x*‖/‖x*‖ after {steps} steps (R = 0.5 bits/dim)",
+        ["method", "final normalized distance"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

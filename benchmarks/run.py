@@ -1,0 +1,45 @@
+"""Run every paper-table/figure benchmark (CPU-friendly sizes).
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig1b fig2 # subset
+
+The multi-pod dry-run / §Roofline table is produced separately by
+`python -m repro.launch.dryrun --sweep` (it needs a 512-device process) and
+formatted by benchmarks.roofline.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (appJ_frames, appN_aspect_ratio,
+                        fig1a_compression_error, fig1b_dgddef_rate,
+                        fig1c_timing, fig1d_sparsified_gd, fig2_svm,
+                        fig3_multiworker, lemma4_covering,
+                        modelscale_ablation, table1_compressors)
+
+ALL = {
+    "table1": table1_compressors.run,
+    "fig1a": fig1a_compression_error.run,
+    "fig1b": fig1b_dgddef_rate.run,
+    "fig1c": fig1c_timing.run,
+    "fig1d": fig1d_sparsified_gd.run,
+    "fig2": fig2_svm.run,
+    "fig3": fig3_multiworker.run,
+    "appJ": appJ_frames.run,
+    "appN": appN_aspect_ratio.run,
+    "lemma4": lemma4_covering.run,
+    "modelscale": modelscale_ablation.run,
+}
+
+
+def main(argv=None) -> None:
+    names = (argv or sys.argv[1:]) or list(ALL)
+    for name in names:
+        t0 = time.time()
+        ALL[name]()
+        print(f"[{name} done in {time.time()-t0:.1f}s]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Continuous-batching serving demo: a request queue through fixed slots.
+
+    PYTHONPATH=src python examples/continuous_batching.py
+
+8 requests with different prompt lengths and generation budgets flow through
+2 decode slots; the scheduler prefills each prompt in isolation, scatters its
+caches into a freed slot mid-flight, and the batched decode_step keeps both
+slots busy. Outputs are token-exact vs generating each request alone
+(verified in tests/test_scheduler.py).
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import model as model_lib
+from repro.serve import BatchScheduler, Request
+
+
+def main():
+    cfg = configs.get_reduced("yi-6b")
+    params = model_lib.init_params(jax.random.key(0), cfg)
+    sched = BatchScheduler(cfg, params, slots=2, max_seq=64)
+
+    key = jax.random.key(1)
+    for i in range(8):
+        prompt = jax.random.randint(jax.random.fold_in(key, i),
+                                    (4 + 2 * i,), 0, cfg.vocab_size,
+                                    jnp.int32)
+        sched.submit(Request(rid=i, prompt=prompt,
+                             max_new_tokens=4 + (i % 3) * 3))
+
+    t0 = time.time()
+    finished = sched.run_to_completion()
+    dt = time.time() - t0
+    total_tokens = sum(len(r.tokens_out) for r in finished)
+    print(f"{len(finished)} requests, {total_tokens} tokens through 2 slots "
+          f"in {dt:.1f}s")
+    for r in sorted(finished, key=lambda r: r.rid):
+        print(f"  req {r.rid}: prompt[{len(r.prompt)}] → {r.tokens_out}")
+
+
+if __name__ == "__main__":
+    main()

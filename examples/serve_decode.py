@@ -1,0 +1,21 @@
+"""Batched serving demo: prefill + greedy decode against explicit caches.
+
+    PYTHONPATH=src python examples/serve_decode.py
+
+Drives the same decode_step that the decode_32k / long_500k dry-run shapes
+lower on the production mesh — here at smoke scale on the host device, for
+a MoE (mixtral-style, ring-buffered sliding window) and a recurrent (xLSTM)
+architecture, demonstrating bounded cache memory past the window.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import configs
+from repro.launch.serve import serve
+
+
+if __name__ == "__main__":
+    for arch in ("mixtral-8x22b", "xlstm-350m"):
+        print(f"\n=== {arch} (reduced) ===")
+        cfg = configs.get_reduced(arch)
+        serve(cfg, batch=4, prompt_len=24, gen=12)

@@ -1,0 +1,2 @@
+"""npz + manifest checkpointing for arbitrary pytrees."""
+from repro.checkpoint.ckpt import save_checkpoint, restore_checkpoint, latest_step

@@ -1,0 +1,73 @@
+"""Checkpointing: pytree ↔ npz with a JSON manifest.
+
+Layout:  <dir>/step_<N>/arrays.npz  +  <dir>/step_<N>/manifest.json
+
+The manifest stores the flattened key paths and dtypes so restore rebuilds
+the exact pytree structure (dicts, tuples, NamedTuples via treedef string
+matching against a caller-provided template). Restore requires a `like`
+template pytree — this keeps the format dependency-free and safe (no pickle).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree.flatten(tree)
+    paths = [jax.tree_util.keystr(p) for p, _ in
+             jax.tree_util.tree_flatten_with_path(tree)[0]]
+    return flat, paths, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    """Write `tree` at `directory/step_<step>/`. Returns the path."""
+    path = os.path.join(directory, f"step_{step}")
+    os.makedirs(path, exist_ok=True)
+    flat, paths, _ = _flatten_with_names(tree)
+    arrays = {f"a{i}": np.asarray(x) for i, x in enumerate(flat)}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    manifest = {"step": step,
+                "leaves": [{"index": i, "path": p,
+                            "shape": list(np.shape(np.asarray(x))),
+                            "dtype": str(np.asarray(x).dtype)}
+                           for i, (p, x) in enumerate(zip(paths, flat))]}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return path
+
+
+def restore_checkpoint(directory: str, like: Any,
+                       step: Optional[int] = None) -> tuple[Any, int]:
+    """Restore into the structure of `like`. Returns (tree, step)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = [z[f"a{leaf['index']}"] for leaf in manifest["leaves"]]
+    like_flat, like_paths, treedef = _flatten_with_names(like)
+    saved_paths = [leaf["path"] for leaf in manifest["leaves"]]
+    if saved_paths != like_paths:
+        raise ValueError(
+            "checkpoint structure mismatch:\n"
+            f"  saved:    {saved_paths[:5]}...\n  template: {like_paths[:5]}...")
+    leaves = [np.asarray(a).astype(np.asarray(t).dtype)
+              for a, t in zip(flat, like_flat)]
+    return jax.tree.unflatten(treedef, leaves), step
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+    return max(steps) if steps else None

@@ -1,0 +1,7 @@
+"""The paper's contribution: democratic embeddings, source coding, algorithms."""
+from repro.core.frames import (DenseFrame, HadamardFrame, haar_frame,
+                               hadamard_frame, subgaussian_frame, make_frame,
+                               next_pow2)
+from repro.core.embeddings import (EmbeddingSpec, democratic, near_democratic,
+                                   kashin_constant_upper)
+from repro.core.coding import Codec, CodecConfig, Payload

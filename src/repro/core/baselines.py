@@ -1,0 +1,142 @@
+"""Baseline compression schemes the paper compares against (Table 1, §5).
+
+Each baseline is exposed as a `(key, y) -> y_hat` roundtrip plus a bit audit,
+so benchmarks can sweep them uniformly alongside DSC/NDSC. These also serve as
+the building blocks that DSC/NDSC wrap via Thm. 4 (compress-in-embedded-space).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizers as q
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    name: str
+    roundtrip: Callable  # (key, y) -> y_hat
+    wire_bits: Callable  # (n) -> float  (scalars like norms ride at f32 = 32b)
+
+
+# -- naive uniform scalar quantizer (the paper's "naive"/DQGD quantizer) ------
+def naive_uniform(levels: int) -> Compressor:
+    def fn(key, y):
+        scale = jnp.max(jnp.abs(y), axis=-1, keepdims=True)
+        safe = jnp.maximum(scale, jnp.finfo(y.dtype).tiny)
+        return q.uniform_quantize(y / safe, levels) * scale
+
+    return Compressor(f"naive-uniform({levels}l)", fn,
+                      lambda n: n * math.log2(levels) + 32)
+
+
+# -- standard dithering (SD [8] shape; ‖·‖∞ dynamic range) --------------------
+def standard_dither(levels: int) -> Compressor:
+    def fn(key, y):
+        scale = jnp.max(jnp.abs(y), axis=-1, keepdims=True)
+        safe = jnp.maximum(scale, jnp.finfo(y.dtype).tiny)
+        return q.dithered_quantize(key, y / safe, levels) * scale
+
+    return Compressor(f"standard-dither({levels}l)", fn,
+                      lambda n: n * math.log2(levels) + 32)
+
+
+# -- QSGD [8]: ℓ2-norm scaling, stochastic levels -----------------------------
+def qsgd(s: int) -> Compressor:
+    """QSGD with s quantization levels on |y_i|/‖y‖₂ ∈ [0,1], sign separate."""
+
+    def fn(key, y):
+        norm = jnp.linalg.norm(y, axis=-1, keepdims=True)
+        safe = jnp.maximum(norm, jnp.finfo(y.dtype).tiny)
+        a = jnp.abs(y) / safe                       # ∈ [0, 1]
+        level = a * s
+        lo = jnp.floor(level)
+        up = jax.random.uniform(key, y.shape) < (level - lo)
+        zeta = (lo + up.astype(y.dtype)) / s
+        return jnp.sign(y) * zeta * norm
+
+    return Compressor(f"qsgd(s={s})", fn,
+                      lambda n: n * (1 + math.log2(s + 1)) + 32)
+
+
+# -- signSGD [14,15] with ℓ1 scale (EF-SignSGD variant) -----------------------
+def sign_compressor(scaled: bool = True) -> Compressor:
+    def fn(key, y):
+        mag = (jnp.mean(jnp.abs(y), axis=-1, keepdims=True) if scaled
+               else jnp.asarray(1.0, y.dtype))
+        return jnp.sign(y) * mag
+
+    return Compressor("sign" + ("-l1" if scaled else ""), fn, lambda n: n + 32)
+
+
+# -- TernGrad [16]: levels {-1, 0, +1}, stochastic, ‖·‖∞ scale ----------------
+def ternary() -> Compressor:
+    def fn(key, y):
+        scale = jnp.max(jnp.abs(y), axis=-1, keepdims=True)
+        safe = jnp.maximum(scale, jnp.finfo(y.dtype).tiny)
+        p = jnp.abs(y) / safe
+        keep = jax.random.uniform(key, y.shape) < p
+        return jnp.sign(y) * keep.astype(y.dtype) * scale
+
+    return Compressor("ternary", fn, lambda n: n * math.log2(3) + 32)
+
+
+# -- top-k sparsification [18] -------------------------------------------------
+def topk(k_fraction: float, quant_levels: Optional[int] = None) -> Compressor:
+    """Keep the top ⌈fn⌉ coordinates by magnitude; optionally quantize them."""
+
+    def fn(key, y):
+        n = y.shape[-1]
+        k = max(1, int(round(k_fraction * n)))
+        thresh = -jnp.sort(-jnp.abs(y), axis=-1)[..., k - 1:k]
+        mask = (jnp.abs(y) >= thresh).astype(y.dtype)
+        kept = y * mask
+        if quant_levels is None:
+            return kept
+        scale = jnp.max(jnp.abs(kept), axis=-1, keepdims=True)
+        safe = jnp.maximum(scale, jnp.finfo(y.dtype).tiny)
+        return q.uniform_quantize(kept / safe, quant_levels) * scale * mask
+
+    def bits(n):
+        k = max(1, int(round(k_fraction * n)))
+        payload = 32 if quant_levels is None else math.log2(quant_levels)
+        return k * payload + math.log2(math.comb(n, k)) + 32
+
+    tag = f"top{int(k_fraction * 100)}%" + (
+        f"+{quant_levels}l" if quant_levels else "")
+    return Compressor(tag, fn, bits)
+
+
+# -- random-k sparsification [19] ----------------------------------------------
+def randk(k_fraction: float, quant_levels: Optional[int] = None,
+          unbiased: bool = False) -> Compressor:
+    def fn(key, y):
+        km, kq = jax.random.split(key)
+        mask = q.subsample_mask(km, y.shape, k_fraction)
+        kept = y * mask
+        if quant_levels is not None:
+            scale = jnp.max(jnp.abs(kept), axis=-1, keepdims=True)
+            safe = jnp.maximum(scale, jnp.finfo(y.dtype).tiny)
+            kept = q.uniform_quantize(kept / safe, quant_levels) * scale * mask
+        if unbiased:
+            kept = kept / k_fraction
+        return kept
+
+    def bits(n):
+        k = max(1, int(round(k_fraction * n)))
+        payload = 32 if quant_levels is None else math.log2(quant_levels)
+        return k * payload + math.log2(math.comb(n, k)) + 32
+
+    tag = f"rand{int(k_fraction * 100)}%" + (
+        f"+{quant_levels}l" if quant_levels else "")
+    return Compressor(tag, fn, bits)
+
+
+def normalized_error(key: jax.Array, comp: Compressor, y: jax.Array) -> jax.Array:
+    """E‖C(y) − y‖₂ / ‖y‖₂ — the metric of paper Fig. 1a / Table 1."""
+    y_hat = comp.roundtrip(key, y)
+    return jnp.linalg.norm(y_hat - y, axis=-1) / jnp.linalg.norm(y, axis=-1)

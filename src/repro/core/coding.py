@@ -1,0 +1,148 @@
+"""Democratic Source Coding (DSC) and Near-Democratic Source Coding (NDSC).
+
+A source coding scheme is a pair (E, D):  E: R^n → {0,1}^{nR} (worker side),
+D: {0,1}^{nR} → R^n (server side). Paper §3:
+
+    E(y) = Q(x / ‖x‖∞),   D(x') = ‖x‖∞ · S x',
+
+with x the (near-)democratic embedding of y w.r.t. frame S. With a budget of
+R bits/dim of the *original* vector, the embedded vector (N = λn dims) gets
+R/λ bits/dim. The scale ‖x‖∞ rides along at f32 — the paper's nR + O(1) bits.
+
+Two quantization modes:
+  * deterministic (nearest-neighbour)  — used by DGD-DEF (error feedback),
+  * dithered (unbiased, gain-shape)    — used by DQ-PSGD; for R < 1 the
+    sub-linear path subsamples coordinates at rate R and spends 1 bit each.
+
+`Payload` is the exact wire format; `wire_bits()` audits the budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizers as q
+from repro.core.embeddings import EmbeddingSpec, kashin_constant_upper
+from repro.core.frames import Frame
+
+
+class Payload(NamedTuple):
+    """What actually crosses the wire."""
+
+    indices: jax.Array            # int32 codewords, shape (..., N)
+    scale: jax.Array              # f32, shape (..., 1) — ‖x‖∞ or gain ‖y‖₂
+    mask: Optional[jax.Array]     # f32 0/1 keep-mask (sub-linear regime) or None
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecConfig:
+    bits_per_dim: float = 4.0            # R — the budget, per ORIGINAL dimension
+    dithered: bool = False               # False: DGD-DEF path; True: DQ-PSGD path
+    unbiased_rescale: bool = True        # sub-linear path: divide by keep rate
+    embedding: EmbeddingSpec = EmbeddingSpec()
+
+
+class Codec:
+    """(E, D) pair bound to a frame. The frame (a pytree) is jit-closable."""
+
+    def __init__(self, frame: Frame, config: CodecConfig):
+        self.frame = frame
+        self.config = config
+        self.n = frame.n
+        self.N = frame.N
+        self.aspect_ratio = frame.N / frame.n
+        # bits per embedded dimension
+        self.embedded_bits = config.bits_per_dim / self.aspect_ratio
+        self.sublinear = self.embedded_bits < 1.0
+        if self.sublinear:
+            self.levels = 2
+            self.keep_fraction = float(self.embedded_bits)
+        else:
+            self.levels = q.levels_for_budget(self.embedded_bits)
+            self.keep_fraction = 1.0
+
+    # -- budget audit -------------------------------------------------------
+    def wire_bits(self) -> float:
+        """Expected bits on the wire per encoded vector (excl. the O(1) scale)."""
+        if self.sublinear:
+            return self.N * self.keep_fraction * 1.0
+        return self.N * math.log2(self.levels)
+
+    # -- encoder (worker) ----------------------------------------------------
+    def encode(self, y: jax.Array, key: Optional[jax.Array] = None) -> Payload:
+        x = self.config.embedding.embed(self.frame, y)
+        scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+        safe = jnp.maximum(scale, jnp.finfo(x.dtype).tiny)
+        xn = x / safe
+        if not self.config.dithered:
+            if self.sublinear:
+                kq, km = jax.random.split(_require(key))
+                mask = q.subsample_mask(km, x.shape, self.keep_fraction)
+                idx = q.quantize_indices(xn, 2)
+                return Payload(idx, scale, mask)
+            return Payload(q.quantize_indices(xn, self.levels), scale, None)
+        # dithered / unbiased path
+        kq, km = jax.random.split(_require(key))
+        if self.sublinear:
+            mask = q.subsample_mask(km, x.shape, self.keep_fraction)
+            idx = q.dithered_quantize_indices(kq, xn, 2)
+            return Payload(idx, scale, mask)
+        idx = q.dithered_quantize_indices(kq, xn, self.levels)
+        return Payload(idx, scale, None)
+
+    # -- decoder (server) ----------------------------------------------------
+    def decode(self, payload: Payload) -> jax.Array:
+        idx, scale, mask = payload
+        if self.config.dithered and not self.sublinear:
+            xn = q.dithered_dequantize_indices(idx, self.levels)
+        elif self.config.dithered and self.sublinear:
+            xn = q.dithered_dequantize_indices(idx, 2)
+        else:
+            xn = q.dequantize_indices(idx, self.levels if not self.sublinear else 2)
+        if mask is not None:
+            xn = xn * mask
+            # 1/keep rescale restores unbiasedness for the DITHERED (DQ-PSGD)
+            # path; the deterministic (DGD-DEF) path relies on error feedback
+            # and a CONTRACTIVE map — rescaling would inflate β past 1.
+            if self.config.unbiased_rescale and self.config.dithered:
+                xn = xn / self.keep_fraction
+        x_hat = xn * scale
+        return self.frame.apply(x_hat)
+
+    def roundtrip(self, y: jax.Array, key: Optional[jax.Array] = None) -> jax.Array:
+        return self.decode(self.encode(y, key))
+
+    # -- theory --------------------------------------------------------------
+    def error_bound(self) -> float:
+        """Thm. 1 contraction β: ‖y − Q(y)‖₂ ≤ β‖y‖₂ (w.h.p.)."""
+        r_over_lambda = self.config.bits_per_dim / self.aspect_ratio
+        if self.config.embedding.kind == "democratic":
+            ku = kashin_constant_upper(self.config.embedding.eta,
+                                       self.config.embedding.delta)
+            return 2.0 ** (1.0 - r_over_lambda) * ku
+        return 2.0 ** (2.0 - r_over_lambda) * math.sqrt(math.log(2 * self.N))
+
+
+def _require(key: Optional[jax.Array]) -> jax.Array:
+    if key is None:
+        raise ValueError("this codec mode is randomized: a PRNG key is required")
+    return key
+
+
+# ---------------------------------------------------------------------------
+# Thm. 4 / App. H: compose ANY unbiased compressor with the embedding.
+# ---------------------------------------------------------------------------
+def compress_in_embedded_space(frame: Frame, compressor, y: jax.Array,
+                               key: Optional[jax.Array] = None,
+                               embedding: EmbeddingSpec = EmbeddingSpec()) -> jax.Array:
+    """E(y) = C(x), D = S· — inherits dimension-free error (paper Thm. 4).
+
+    `compressor(key, x) -> x_hat` is any (possibly stochastic) compression map.
+    """
+    x = embedding.embed(frame, y)
+    x_hat = compressor(key, x)
+    return frame.apply(x_hat)

@@ -1,0 +1,158 @@
+"""Randomized frame constructions S ∈ R^{n×N} (n ≤ N) for (near-)democratic embeddings.
+
+All frames here are (approximately) Parseval: S Sᵀ = I_n, so the
+near-democratic embedding has the closed form x_nd = Sᵀ y  (paper Eq. (8)).
+
+Three families (paper §2.1, App. J):
+  * Haar random orthonormal  — n rows of a Haar-distributed N×N orthogonal matrix.
+  * Randomized Hadamard      — S = P D H. Stored as a sign vector (D) and a
+                               row-selection index (P); applying S / Sᵀ uses the
+                               fast Walsh–Hadamard transform: O(N log N) adds.
+  * Sub-Gaussian (Gaussian)  — G/√N i.i.d. entries; approximate Parseval frame.
+
+Frames are immutable pytrees so they can be closed over / passed through jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kernel_ops
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DenseFrame:
+    """Explicit S ∈ R^{n×N}: Haar orthonormal or sub-Gaussian."""
+
+    S: jax.Array  # (n, N)
+
+    @property
+    def n(self) -> int:
+        return self.S.shape[0]
+
+    @property
+    def N(self) -> int:
+        return self.S.shape[1]
+
+    @property
+    def aspect_ratio(self) -> float:
+        return self.N / self.n
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        """y = S x. x: (..., N) → (..., n)."""
+        return x @ self.S.T
+
+    def apply_t(self, y: jax.Array) -> jax.Array:
+        """x = Sᵀ y. y: (..., n) → (..., N)."""
+        return y @ self.S
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class HadamardFrame:
+    """S = P D H with H the normalized N×N Hadamard matrix (entries ±1/√N).
+
+    Parseval by construction: S Sᵀ = P D H Hᵀ D Pᵀ = I_n.
+    `signs` is the diagonal of D (±1, int8); `rows` the indices kept by P.
+    Sᵀ y = H D Pᵀ y is computed with an FWHT (Pallas kernel on TPU).
+    """
+
+    signs: jax.Array  # (N,) ±1
+    rows: jax.Array   # (n,) int32 indices into [0, N)
+
+    @property
+    def n(self) -> int:
+        return self.rows.shape[0]
+
+    @property
+    def N(self) -> int:
+        return self.signs.shape[0]
+
+    @property
+    def aspect_ratio(self) -> float:
+        return self.N / self.n
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        """y = S x = P (D (H x)). x: (..., N) → (..., n)."""
+        hx = kernel_ops.fwht(x)  # H x (H symmetric, orthonormal)
+        dx = hx * self.signs.astype(x.dtype)
+        return jnp.take(dx, self.rows, axis=-1)
+
+    def apply_t(self, y: jax.Array) -> jax.Array:
+        """x = Sᵀ y = H (D (Pᵀ y)). y: (..., n) → (..., N)."""
+        z = jnp.zeros(y.shape[:-1] + (self.N,), y.dtype)
+        z = z.at[..., self.rows].set(y)
+        return kernel_ops.fwht(z * self.signs.astype(y.dtype))
+
+
+Frame = Union[DenseFrame, HadamardFrame]
+
+
+def haar_frame(key: jax.Array, n: int, N: int, dtype=jnp.float32) -> DenseFrame:
+    """n random rows of a Haar-distributed N×N orthogonal matrix (paper §2.1)."""
+    if n > N:
+        raise ValueError(f"need n <= N, got {n} > {N}")
+    kq, kp = jax.random.split(key)
+    g = jax.random.normal(kq, (N, N), dtype=jnp.float32)
+    q, r = jnp.linalg.qr(g)
+    # Sign-correct so Q is Haar (QR alone is not Haar-distributed).
+    q = q * jnp.sign(jnp.diagonal(r))[None, :]
+    rows = jax.random.permutation(kp, N)[:n]
+    return DenseFrame(S=q[rows].astype(dtype))
+
+
+def subgaussian_frame(key: jax.Array, n: int, N: int, dtype=jnp.float32) -> DenseFrame:
+    """i.i.d. N(0, 1/N) entries — approximate Parseval frame (paper App. J.1)."""
+    if n > N:
+        raise ValueError(f"need n <= N, got {n} > {N}")
+    return DenseFrame(S=(jax.random.normal(key, (n, N)) / jnp.sqrt(N)).astype(dtype))
+
+
+def hadamard_frame(key: jax.Array, n: int, N: int | None = None) -> HadamardFrame:
+    """Randomized Hadamard frame S = P D H (paper §2.1). N must be a power of 2."""
+    if N is None:
+        N = next_pow2(n)
+    if not _is_pow2(N):
+        raise ValueError(f"Hadamard dimension N={N} must be a power of 2")
+    if n > N:
+        raise ValueError(f"need n <= N, got {n} > {N}")
+    ks, kp = jax.random.split(key)
+    signs = jax.random.rademacher(ks, (N,), dtype=jnp.int8)
+    rows = (jax.random.permutation(kp, N)[:n] if n < N
+            else jnp.arange(N, dtype=jnp.int32))
+    return HadamardFrame(signs=signs, rows=rows.astype(jnp.int32))
+
+
+def make_frame(kind: str, key: jax.Array, n: int, N: int | None = None) -> Frame:
+    """Factory: kind ∈ {'haar', 'hadamard', 'subgaussian'}."""
+    if kind == "hadamard":
+        return hadamard_frame(key, n, N)
+    if N is None:
+        N = n
+    if kind == "haar":
+        return haar_frame(key, n, N)
+    if kind == "subgaussian":
+        return subgaussian_frame(key, n, N)
+    raise ValueError(f"unknown frame kind: {kind!r}")
+
+
+def dense_matrix(frame: Frame) -> jax.Array:
+    """Materialize S as an explicit (n, N) matrix (tests / small n only)."""
+    if isinstance(frame, DenseFrame):
+        return frame.S
+    eye = jnp.eye(frame.N, dtype=jnp.float32)
+    # columns of S are S e_i = apply(e_i)
+    return jax.vmap(frame.apply)(eye).T

@@ -1,0 +1,213 @@
+"""The paper's optimization algorithms (§4).
+
+  * DGD-DEF  (Alg. 1) — Distributed GD with Democratically Encoded Feedback:
+      z_t = x̂_t + α e_{t−1};  u_t = ∇f(z_t) − e_{t−1};  v = E(u_t);
+      e_t = D(v) − u_t;  x̂_{t+1} = x̂_t − α D(v).
+    Deterministic codec + error feedback; rate max{ν, β}^T (Thm. 2).
+  * DQGD baseline — same loop with any compressor roundtrip in place of (E, D)
+    (the naive-scalar-quantizer comparator of [6] / Fig. 1b).
+  * DQ-PSGD  (Alg. 2) — projected stochastic subgradient descent with a
+    dithered (unbiased) codec; no error feedback needed; Thm. 3 rate.
+  * DQ-PSGD multi-worker (Alg. 3) — consensus mean of per-worker decodes at
+    the parameter server.
+
+Everything is pure JAX: loops are `lax.scan`, oracles are closures, codecs are
+pytree-closable objects from repro.core.coding.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.coding import Codec
+
+
+class Trace(NamedTuple):
+    x_final: jax.Array
+    x_avg: jax.Array          # uniform iterate average (PSGD output)
+    dist_history: jax.Array   # ‖x_t − x*‖₂ per step (if x_star given, else ‖x_t‖)
+
+
+def _dist(x, x_star):
+    ref = x if x_star is None else x - x_star
+    return jnp.linalg.norm(ref)
+
+
+# ---------------------------------------------------------------------------
+# Smooth & strongly convex: DGD-DEF (Alg. 1)
+# ---------------------------------------------------------------------------
+def dgd_def(grad_fn: Callable[[jax.Array], jax.Array], x0: jax.Array,
+            codec: Codec, alpha: float, steps: int,
+            key: Optional[jax.Array] = None,
+            x_star: Optional[jax.Array] = None) -> Trace:
+    """Paper Algorithm 1. `codec` should be deterministic (dithered=False);
+    a key is still threaded for sub-linear/randomized modes."""
+    if key is None:
+        key = jax.random.key(0)
+
+    def step(carry, k):
+        x_hat, e_prev = carry
+        z = x_hat + alpha * e_prev                     # gradient access point
+        u = grad_fn(z) - e_prev                        # error feedback
+        payload = codec.encode(u, k)                   # source encoding
+        q_t = codec.decode(payload)                    # server decoding
+        e = q_t - u                                    # error for next step
+        x_next = x_hat - alpha * q_t                   # descent step
+        return (x_next, e), _dist(x_next, x_star)
+
+    keys = jax.random.split(key, steps)
+    (x_fin, _), hist = jax.lax.scan(step, (x0, jnp.zeros_like(x0)), keys)
+    return Trace(x_fin, x_fin, hist)
+
+
+def dqgd(grad_fn: Callable[[jax.Array], jax.Array], x0: jax.Array,
+         compressor_roundtrip: Callable[[jax.Array, jax.Array], jax.Array],
+         alpha: float, steps: int, key: Optional[jax.Array] = None,
+         x_star: Optional[jax.Array] = None) -> Trace:
+    """Error-feedback QGD with an arbitrary compressor (the naive baseline)."""
+    if key is None:
+        key = jax.random.key(0)
+
+    def step(carry, k):
+        x_hat, e_prev = carry
+        z = x_hat + alpha * e_prev
+        u = grad_fn(z) - e_prev
+        q_t = compressor_roundtrip(k, u)
+        e = q_t - u
+        x_next = x_hat - alpha * q_t
+        return (x_next, e), _dist(x_next, x_star)
+
+    keys = jax.random.split(key, steps)
+    (x_fin, _), hist = jax.lax.scan(step, (x0, jnp.zeros_like(x0)), keys)
+    return Trace(x_fin, x_fin, hist)
+
+
+def dqgd_schedule(grad_fn, x0, levels: int, alpha: float, steps: int,
+                  L: float, mu: float, D: float, n: int,
+                  x_star=None) -> Trace:
+    """DQGD of Lin–Kostina–Hassibi [6] (the paper's Fig. 1b comparator).
+
+    Nearest-neighbour scalar quantization over a PREDEFINED shrinking
+    dynamic-range sequence r_t — no scale is transmitted (that is the point
+    of [6]); when √n/levels exceeds the contraction the range can no longer
+    track the error and the iterates stall/diverge: the √n dimension penalty
+    the democratic embedding removes.
+    """
+    sigma = sigma_rate(L, mu)
+    rate = min(max(sigma, math.sqrt(n) / levels), 1.05)
+    r0 = L * D
+
+    def step(carry, t):
+        x_hat, e_prev, r = carry
+        z = x_hat + alpha * e_prev
+        u = grad_fn(z) - e_prev
+        # quantize u coordinate-wise on [-r, r] without sending r
+        delta = 2.0 * r / levels
+        idx = jnp.clip(jnp.floor((jnp.clip(u, -r, r) + r) / delta),
+                       0, levels - 1)
+        q_t = -r + (2.0 * idx + 1.0) * delta / 2.0
+        e = q_t - u
+        x_next = x_hat - alpha * q_t
+        return (x_next, e, r * rate), _dist(x_next, x_star)
+
+    (x_fin, _, _), hist = jax.lax.scan(
+        step, (x0, jnp.zeros_like(x0), jnp.asarray(r0, x0.dtype)),
+        jnp.arange(steps))
+    return Trace(x_fin, x_fin, hist)
+
+
+def gd(grad_fn, x0, alpha, steps, x_star=None) -> Trace:
+    """Unquantized gradient descent reference."""
+
+    def step(x, _):
+        x_next = x - alpha * grad_fn(x)
+        return x_next, _dist(x_next, x_star)
+
+    x_fin, hist = jax.lax.scan(step, x0, jnp.arange(steps))
+    return Trace(x_fin, x_fin, hist)
+
+
+# ---------------------------------------------------------------------------
+# General convex non-smooth: DQ-PSGD (Alg. 2) and multi-worker (Alg. 3)
+# ---------------------------------------------------------------------------
+def dq_psgd(subgrad_fn: Callable[[jax.Array, jax.Array], jax.Array],
+            x0: jax.Array, codec: Optional[Codec], alpha: float, steps: int,
+            key: jax.Array, project: Callable[[jax.Array], jax.Array] = lambda x: x,
+            x_star: Optional[jax.Array] = None,
+            compressor_roundtrip=None) -> Trace:
+    """Paper Algorithm 2. `codec` should be dithered (unbiased). If
+    `compressor_roundtrip` is given it is used instead (naive baselines).
+    Output is the iterate average x̄_T = (1/T)Σ x̂_t."""
+
+    def step(carry, k):
+        x_hat, x_sum = carry
+        ko, kq = jax.random.split(k)
+        g = subgrad_fn(ko, x_hat)                      # noisy subgradient
+        if compressor_roundtrip is not None:
+            q_t = compressor_roundtrip(kq, g)
+        elif codec is not None:
+            q_t = codec.decode(codec.encode(g, kq))    # encode + decode
+        else:
+            q_t = g                                    # unquantized reference
+        x_next = project(x_hat - alpha * q_t)          # subgradient + projection
+        return (x_next, x_sum + x_next), _dist(x_next, x_star)
+
+    keys = jax.random.split(key, steps)
+    (x_fin, x_sum), hist = jax.lax.scan(step, (x0, jnp.zeros_like(x0)), keys)
+    return Trace(x_fin, x_sum / steps, hist)
+
+
+def dq_psgd_multiworker(subgrad_fns_key: Callable[[jax.Array, jax.Array, jax.Array], jax.Array],
+                        num_workers: int, x0: jax.Array, codec: Optional[Codec],
+                        alpha: float, steps: int, key: jax.Array,
+                        project: Callable[[jax.Array], jax.Array] = lambda x: x,
+                        x_star: Optional[jax.Array] = None,
+                        compressor_roundtrip=None) -> Trace:
+    """Paper Algorithm 3 (parameter server + m workers).
+
+    `subgrad_fns_key(worker_id, key, x)` returns worker i's noisy subgradient.
+    Per step: each worker encodes its subgradient; the server decodes all m
+    payloads and takes the consensus mean, then a projected subgradient step.
+    """
+    worker_ids = jnp.arange(num_workers)
+
+    def one_worker(i, k, x):
+        g = subgrad_fns_key(i, k, x)
+        if compressor_roundtrip is not None:
+            return compressor_roundtrip(k, g)
+        if codec is not None:
+            return codec.decode(codec.encode(g, k))
+        return g
+
+    def step(carry, k):
+        x_hat, x_sum = carry
+        keys = jax.random.split(k, num_workers)
+        decodes = jax.vmap(one_worker, in_axes=(0, 0, None))(worker_ids, keys, x_hat)
+        q_t = jnp.mean(decodes, axis=0)                # consensus step
+        x_next = project(x_hat - alpha * q_t)
+        return (x_next, x_sum + x_next), _dist(x_next, x_star)
+
+    keys = jax.random.split(key, steps)
+    (x_fin, x_sum), hist = jax.lax.scan(step, (x0, jnp.zeros_like(x0)), keys)
+    return Trace(x_fin, x_sum / steps, hist)
+
+
+# ---------------------------------------------------------------------------
+# Step-size helpers (paper Thm. 2 / Thm. 3)
+# ---------------------------------------------------------------------------
+def alpha_star(L: float, mu: float) -> float:
+    """α* = 2/(L+μ) — the optimal GD step size for F_{μ,L,D} (Thm. 2)."""
+    return 2.0 / (L + mu)
+
+
+def sigma_rate(L: float, mu: float) -> float:
+    """σ = (L−μ)/(L+μ) — unquantized linear rate / lower-bound floor."""
+    return (L - mu) / (L + mu)
+
+
+def psgd_alpha(D: float, B: float, Ku: float, R: float, T: int) -> float:
+    """α = (D/(B·K_u))·√(min{R,1}/T) (Thm. 3)."""
+    return (D / (B * Ku)) * (min(R, 1.0) / T) ** 0.5

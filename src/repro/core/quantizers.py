@@ -1,0 +1,102 @@
+"""Scalar quantizers (paper §3, App. E).
+
+  * uniform_quantize      — deterministic R-bit nearest-neighbour on B∞(1)
+                            (Eq. (11); used by DSC/NDSC for DGD-DEF).
+  * dithered_quantize     — stochastic/unbiased uniform quantizer (App. E, CUQ;
+                            used by DQ-PSGD — unbiasedness removes the need for
+                            error feedback with stochastic oracles).
+  * gain_quantize         — dithered scalar quantizer for the magnitude on [0, B]
+                            (Eq. (20)).
+  * subsample_mask        — the sub-linear budget (R < 1) path: keep ⌊nR⌋ random
+                            coordinates, 1 bit each, unbiased 1/R rescale (App E.2).
+
+All quantizers take `levels` (number of quantization points per dimension)
+rather than bits, so fractional effective budgets R/λ are supported exactly:
+levels = floor(2^{R/λ}) for the deterministic path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def levels_for_budget(bits_per_dim: float) -> int:
+    """Number of uniform levels affordable with `bits_per_dim` bits (≥ 2)."""
+    return max(2, int(2.0 ** bits_per_dim))
+
+
+def uniform_quantize(x: jax.Array, levels: int) -> jax.Array:
+    """Deterministic nearest-neighbour uniform quantizer on [-1, 1].
+
+    Quantization points v_i = -1 + (2i+1)Δ/2, Δ = 2/levels (paper §3).
+    Max per-coordinate error Δ/2.
+    """
+    delta = 2.0 / levels
+    idx = jnp.clip(jnp.floor((jnp.clip(x, -1.0, 1.0) + 1.0) / delta), 0, levels - 1)
+    return -1.0 + (2.0 * idx + 1.0) * delta / 2.0
+
+
+def quantize_indices(x: jax.Array, levels: int) -> jax.Array:
+    """Integer codewords of the deterministic uniform quantizer (for the wire)."""
+    delta = 2.0 / levels
+    idx = jnp.clip(jnp.floor((jnp.clip(x, -1.0, 1.0) + 1.0) / delta), 0, levels - 1)
+    return idx.astype(jnp.int32)
+
+
+def dequantize_indices(idx: jax.Array, levels: int, dtype=jnp.float32) -> jax.Array:
+    delta = 2.0 / levels
+    return (-1.0 + (2.0 * idx.astype(dtype) + 1.0) * delta / 2.0)
+
+
+def dithered_quantize(key: jax.Array, x: jax.Array, levels: int,
+                      lo: float | jax.Array = -1.0,
+                      hi: float | jax.Array = 1.0) -> jax.Array:
+    """Unbiased stochastic uniform quantizer on [lo, hi] (paper Eq. (20)).
+
+    For v ∈ [u_j, u_{j+1}): outputs u_j w.p. (u_{j+1}−v)/Δ else u_{j+1};
+    E[Q(v)] = v for v inside the range.
+    """
+    delta = (hi - lo) / (levels - 1)
+    pos = (jnp.clip(x, lo, hi) - lo) / delta           # ∈ [0, levels-1]
+    base = jnp.floor(pos)
+    frac = pos - base                                   # P[round up]
+    up = jax.random.uniform(key, x.shape) < frac
+    idx = jnp.clip(base + up.astype(base.dtype), 0, levels - 1)
+    return lo + idx * delta
+
+
+def dithered_quantize_indices(key: jax.Array, x: jax.Array, levels: int,
+                              lo: float | jax.Array = -1.0,
+                              hi: float | jax.Array = 1.0) -> jax.Array:
+    """Integer codewords of the dithered quantizer."""
+    delta = (hi - lo) / (levels - 1)
+    pos = (jnp.clip(x, lo, hi) - lo) / delta
+    base = jnp.floor(pos)
+    frac = pos - base
+    up = jax.random.uniform(key, x.shape) < frac
+    return jnp.clip(base + up.astype(base.dtype), 0, levels - 1).astype(jnp.int32)
+
+
+def dithered_dequantize_indices(idx: jax.Array, levels: int,
+                                lo: float | jax.Array = -1.0,
+                                hi: float | jax.Array = 1.0,
+                                dtype=jnp.float32) -> jax.Array:
+    delta = (hi - lo) / (levels - 1)
+    return lo + idx.astype(dtype) * delta
+
+
+def gain_quantize(key: jax.Array, v: jax.Array, dynamic_range: float,
+                  bits: int = 32) -> jax.Array:
+    """Dithered magnitude quantizer Q_G on [0, B] (paper Eq. (20)); unbiased."""
+    levels = min(2 ** bits, 2 ** 31)
+    return dithered_quantize(key, v, levels, lo=0.0, hi=dynamic_range)
+
+
+def subsample_mask(key: jax.Array, shape: tuple[int, ...], keep_fraction: float) -> jax.Array:
+    """Bernoulli keep-mask for the sub-linear regime (App. E.2).
+
+    E[mask] = keep_fraction, so dividing the kept values by keep_fraction is
+    unbiased. (The paper samples exactly ⌊nR⌋ without replacement; Bernoulli
+    sampling has the same mean budget and is shard-local — no global sort.)
+    """
+    return (jax.random.uniform(key, shape) < keep_fraction).astype(jnp.float32)

@@ -1,0 +1,4 @@
+"""Deterministic synthetic data pipeline (no datasets ship offline)."""
+from repro.data.pipeline import (TokenStream, synthetic_lm_batches,
+                                 synthetic_regression, synthetic_two_class,
+                                 batch_for_shape)

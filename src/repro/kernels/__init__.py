@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the codec + serving hot spots.
+
+Each kernel ships three artifacts: the pl.pallas_call kernel, a jit'd public
+wrapper in ops.py, and a pure-jnp oracle in ref.py that tests sweep against.
+
+  fwht.py        -- fast Walsh-Hadamard transform (NDSC embedding core)
+  quantpack.py   -- fused uniform-quantize + bit-pack / unpack + dequant
+  quantdecode.py -- fused dequantize + flash-decode attention against the
+                    NDSC-packed KV cache (beyond-paper serving path)
+"""

@@ -1,0 +1,49 @@
+"""jit'd public wrappers around the Pallas kernels, with pure-jnp fallback.
+
+Dispatch policy:
+  * On TPU: Pallas kernels (compiled).
+  * On CPU (this container): the jnp reference — numerically identical and much
+    faster than interpret-mode Pallas. Tests exercise the Pallas path explicitly
+    with interpret=True to validate the kernels against the reference oracles.
+Set REPRO_FORCE_PALLAS=1 to force the (interpret-mode on CPU) Pallas path.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fwht as _fwht_kernel
+from repro.kernels import quantpack as _quantpack_kernel
+from repro.kernels import ref as _ref
+
+
+def _use_pallas() -> bool:
+    if os.environ.get("REPRO_FORCE_PALLAS") == "1":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def fwht(x: jax.Array) -> jax.Array:
+    """Normalized Walsh–Hadamard transform along the last axis (power-of-2 len)."""
+    if _use_pallas() and x.shape[-1] <= _fwht_kernel.MAX_VMEM_N:
+        return _fwht_kernel.fwht_pallas(
+            x, interpret=jax.default_backend() != "tpu")
+    return _ref.fwht(x)
+
+
+def quantize_pack(x: jax.Array, scale: jax.Array, bits: int) -> jax.Array:
+    """Fused uniform-quantize + bit-pack to int32 words (bits ∈ {1,2,4,8})."""
+    if _use_pallas():
+        return _quantpack_kernel.quantize_pack_pallas(
+            x, scale, bits, interpret=jax.default_backend() != "tpu")
+    return _ref.quantize_pack(x, scale, bits)
+
+
+def unpack_dequant(words: jax.Array, scale: jax.Array, bits: int, n: int) -> jax.Array:
+    """Fused unpack + dequantize (inverse of quantize_pack)."""
+    if _use_pallas():
+        return _quantpack_kernel.unpack_dequant_pallas(
+            words, scale, bits, n, interpret=jax.default_backend() != "tpu")
+    return _ref.unpack_dequant(words, scale, bits, n)

@@ -1,0 +1,116 @@
+"""Pallas TPU kernels: fused quantize→bit-pack encoder and unpack→dequant decoder.
+
+The second hot spot of the codec: after the FWHT produces the near-democratic
+embedding, each chunk is scaled by 1/‖x‖∞, uniformly quantized to R bits and
+bit-packed into int32 words — all inside one VMEM tile, so the intermediate
+per-element integer codes never round-trip through HBM. The decoder fuses the
+inverse. bits ∈ {1, 2, 4, 8} (packing factor k = 32/bits).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _quantpack_kernel(x_ref, scale_ref, o_ref, *, bits: int, n: int):
+    x = x_ref[...]                       # (rows, n) float
+    scale = scale_ref[...]               # (rows, 1) float
+    k = 32 // bits
+    m = 2 ** bits
+    delta = 2.0 / m
+    normalized = x / jnp.maximum(scale, jnp.finfo(x.dtype).tiny)
+    idx = jnp.floor((jnp.clip(normalized, -1.0, 1.0) + 1.0) / delta)
+    idx = jnp.clip(idx, 0, m - 1).astype(jnp.uint32)
+    grouped = idx.reshape(idx.shape[0], n // k, k)
+    shifts = (jnp.arange(k, dtype=jnp.uint32) * bits)[None, None, :]
+    words = jnp.sum(grouped << shifts, axis=-1, dtype=jnp.uint32)
+    o_ref[...] = words.astype(jnp.int32)
+
+
+def _unpackdequant_kernel(w_ref, scale_ref, o_ref, *, bits: int, n: int):
+    words = w_ref[...].astype(jnp.uint32)   # (rows, n//k)
+    scale = scale_ref[...]                   # (rows, 1)
+    k = 32 // bits
+    m = 2 ** bits
+    mask = jnp.uint32(m - 1)
+    shifts = (jnp.arange(k, dtype=jnp.uint32) * bits)[None, None, :]
+    idx = (words[:, :, None] >> shifts) & mask
+    idx = idx.reshape(words.shape[0], n)
+    values = -1.0 + (2.0 * idx.astype(o_ref.dtype) + 1.0) / m
+    o_ref[...] = values * scale
+
+
+def _tile(call, flat_inputs, out_shape, block_rows):
+    rows = flat_inputs[0].shape[0]
+    padded = -(-rows // block_rows) * block_rows
+    if padded != rows:
+        flat_inputs = [jnp.pad(a, ((0, padded - rows), (0, 0))) for a in flat_inputs]
+    out = call(padded, flat_inputs)
+    return out[:rows]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_rows", "interpret"))
+def quantize_pack_pallas(x: jax.Array, scale: jax.Array, bits: int,
+                         block_rows: int = DEFAULT_BLOCK_ROWS,
+                         interpret: bool = True) -> jax.Array:
+    """x: (..., N) float, scale: (..., 1) → packed int32 (..., N*bits/32)."""
+    if bits not in (1, 2, 4, 8):
+        raise ValueError(f"bits must be in {{1,2,4,8}}, got {bits}")
+    k = 32 // bits
+    n = x.shape[-1]
+    if n % k:
+        raise ValueError(f"N={n} not divisible by packing factor {k}")
+    lead = x.shape[:-1]
+    flat_x = x.reshape((-1, n))
+    flat_s = jnp.broadcast_to(scale, lead + (1,)).reshape((-1, 1))
+
+    def call(padded_rows, inputs):
+        grid = (padded_rows // block_rows,)
+        return pl.pallas_call(
+            functools.partial(_quantpack_kernel, bits=bits, n=n),
+            grid=grid,
+            in_specs=[pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+                      pl.BlockSpec((block_rows, 1), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((block_rows, n // k), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((padded_rows, n // k), jnp.int32),
+            interpret=interpret,
+        )(*inputs)
+
+    out = _tile(call, [flat_x, flat_s], None, block_rows)
+    return out.reshape(lead + (n // k,))
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "n", "block_rows", "interpret"))
+def unpack_dequant_pallas(words: jax.Array, scale: jax.Array, bits: int, n: int,
+                          block_rows: int = DEFAULT_BLOCK_ROWS,
+                          interpret: bool = True) -> jax.Array:
+    """words: (..., N*bits/32) int32, scale: (..., 1) → float (..., n)."""
+    if bits not in (1, 2, 4, 8):
+        raise ValueError(f"bits must be in {{1,2,4,8}}, got {bits}")
+    k = 32 // bits
+    if n % k:
+        raise ValueError(f"N={n} not divisible by packing factor {k}")
+    lead = words.shape[:-1]
+    flat_w = words.reshape((-1, words.shape[-1]))
+    flat_s = jnp.broadcast_to(scale, lead + (1,)).reshape((-1, 1)).astype(jnp.float32)
+
+    def call(padded_rows, inputs):
+        grid = (padded_rows // block_rows,)
+        return pl.pallas_call(
+            functools.partial(_unpackdequant_kernel, bits=bits, n=n),
+            grid=grid,
+            in_specs=[pl.BlockSpec((block_rows, n // k), lambda i: (i, 0)),
+                      pl.BlockSpec((block_rows, 1), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((padded_rows, n), jnp.float32),
+            interpret=interpret,
+        )(*inputs)
+
+    out = _tile(call, [flat_w, flat_s], None, block_rows)
+    return out.reshape(lead + (n,))

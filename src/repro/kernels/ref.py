@@ -1,0 +1,102 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These define the semantics; the Pallas kernels in fwht.py / quantpack.py must
+match them (tests sweep shapes/dtypes and assert_allclose against these).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def fwht(x: jax.Array) -> jax.Array:
+    """Normalized fast Walsh–Hadamard transform along the last axis.
+
+    Computes H x with H the N×N Hadamard matrix with entries ±1/√N
+    (H = Hᵀ, H Hᵀ = I). N = x.shape[-1] must be a power of 2.
+    """
+    n = x.shape[-1]
+    if n & (n - 1):
+        raise ValueError(f"FWHT length {n} is not a power of 2")
+    orig_shape = x.shape
+    y = x.reshape((-1, n))
+    h = 1
+    while h < n:
+        y = y.reshape((-1, n // (2 * h), 2, h))
+        a = y[:, :, 0, :]
+        b = y[:, :, 1, :]
+        y = jnp.stack([a + b, a - b], axis=2)
+        y = y.reshape((-1, n))
+        h *= 2
+    scale = jnp.asarray(1.0 / math.sqrt(n), x.dtype)
+    return (y * scale).reshape(orig_shape)
+
+
+def quantize_pack(x: jax.Array, scale: jax.Array, bits: int) -> jax.Array:
+    """Uniform R-bit nearest-neighbour quantize + bit-pack into int32 words.
+
+    x:     (..., N) float; values assumed (softly) within ±scale.
+    scale: broadcastable to x[..., :1] — the per-row dynamic range (‖x‖∞).
+    bits:  ∈ {1, 2, 4, 8} — levels M = 2^bits on [-1, 1], v_i = -1 + (2i+1)/M.
+
+    Returns int32 words of shape (..., N * bits / 32); N must be divisible
+    by the packing factor k = 32 // bits.
+    """
+    if bits not in (1, 2, 4, 8):
+        raise ValueError(f"bits must be in {{1,2,4,8}}, got {bits}")
+    k = 32 // bits
+    n = x.shape[-1]
+    if n % k:
+        raise ValueError(f"N={n} not divisible by packing factor {k}")
+    m = 2 ** bits
+    delta = 2.0 / m
+    normalized = x / jnp.maximum(scale, jnp.finfo(x.dtype).tiny)
+    # nearest-neighbour index of v_i = -1 + (2i+1)/M
+    idx = jnp.floor((jnp.clip(normalized, -1.0, 1.0) + 1.0) / delta)
+    idx = jnp.clip(idx, 0, m - 1).astype(jnp.uint32)
+    grouped = idx.reshape(x.shape[:-1] + (n // k, k))
+    shifts = (jnp.arange(k, dtype=jnp.uint32) * bits)[(None,) * (grouped.ndim - 1)]
+    words = jnp.sum(grouped << shifts, axis=-1, dtype=jnp.uint32)
+    return words.astype(jnp.int32)
+
+
+def quant_decode_attention(q: jax.Array, kw: jax.Array, ks: jax.Array,
+                           vw: jax.Array, vs: jax.Array, kv_len: jax.Array,
+                           *, bits: int, inv_rotate_v: bool = True
+                           ) -> jax.Array:
+    """Oracle for kernels/quantdecode.py: dequantize the packed rotated KV
+    cache and run exact softmax attention, inverse-rotating V at the end.
+
+    q: (B,K,G,dh) f32 (pre-scaled, rotated basis); kw/vw: (B,C,K,dh·bits/32);
+    ks/vs: (B,C,K); kv_len: (B,). Returns (B,K,G,dh)."""
+    b, kh, g, dh = q.shape
+    c = kw.shape[1]
+    kd = unpack_dequant(kw, ks[..., None], bits, dh)      # (B,C,K,dh)
+    vd = unpack_dequant(vw, vs[..., None], bits, dh)
+    s = jnp.einsum("bkgd,bckd->bkgc", q, kd)
+    pos = jnp.arange(c, dtype=jnp.int32)
+    s = jnp.where((pos[None, :] < kv_len[:, None])[:, None, None, :],
+                  s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", p, vd)
+    if inv_rotate_v:
+        out = fwht(out)
+    return out
+
+
+def unpack_dequant(words: jax.Array, scale: jax.Array, bits: int, n: int,
+                   dtype=jnp.float32) -> jax.Array:
+    """Inverse of quantize_pack: int32 words → dequantized float (..., n)."""
+    if bits not in (1, 2, 4, 8):
+        raise ValueError(f"bits must be in {{1,2,4,8}}, got {bits}")
+    k = 32 // bits
+    m = 2 ** bits
+    mask = jnp.uint32(m - 1)
+    w = words.astype(jnp.uint32)[..., None]
+    shifts = (jnp.arange(k, dtype=jnp.uint32) * bits)[(None,) * (words.ndim)]
+    idx = (w >> shifts) & mask
+    idx = idx.reshape(words.shape[:-1] + (words.shape[-1] * k,))[..., :n]
+    values = -1.0 + (2.0 * idx.astype(dtype) + 1.0) / m
+    return values * scale

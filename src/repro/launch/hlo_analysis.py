@@ -1,0 +1,174 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+Sources (ROOFLINE ANALYSIS spec):
+  * compiled.cost_analysis()  → HLO_FLOPs, HLO bytes accessed
+  * compiled.as_text()        → collective ops; the SPMD-partitioned module
+    carries PER-DEVICE shapes, so operand bytes summed here are per-device —
+    the roofline's collective_bytes/(chips·link_bw) therefore uses link_bw
+    directly (the ÷chips is already baked into the per-device program).
+
+Per-kind operand-size conventions (result shapes are what the text shows):
+  all-gather       operand = result / group      (input shard)
+  all-reduce       operand = result              (in-place reduce)
+  reduce-scatter   operand = result × group      (input, pre-scatter)
+  all-to-all       operand = result              (bytes in = bytes out)
+  collective-permute operand = result
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s ICI
+per link.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+# v5e per-chip constants
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+ = (.*?) "
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_NEW_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    """Total bytes of a (possibly tuple) HLO shape string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_NEW_RE.search(line)          # replica_groups=[G,S]
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)              # replica_groups={{0,1,...},...}
+    if m:
+        return max(1, m.group(1).count(",") + 1)
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    operand_bytes: int = 0          # per-device, per the spec's convention
+    wire_bytes: int = 0             # ring-model bytes actually crossing links
+    by_kind: dict = dataclasses.field(default_factory=dict)
+    count: int = 0
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    seen_done = set()
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shape_text, kind = m.group(1), m.group(2)
+        line = hlo_text[m.start():hlo_text.find("\n", m.start())]
+        if "-done(" in line:        # async pair: count only the start
+            continue
+        result = _shape_bytes(shape_text)
+        g = _group_size(line)
+        if kind == "all-gather":
+            operand = result // max(g, 1)
+            wire = result - operand                   # (g-1)/g × result
+        elif kind == "all-reduce":
+            operand = result
+            wire = 2 * result * (g - 1) // max(g, 1)  # ring AR
+        elif kind == "reduce-scatter":
+            operand = result * g
+            wire = result * (g - 1)
+        else:                                          # a2a / permute
+            operand = result
+            wire = result
+        stats.operand_bytes += operand
+        stats.wire_bytes += wire
+        k = stats.by_kind.setdefault(kind, {"count": 0, "operand_bytes": 0})
+        k["count"] += 1
+        k["operand_bytes"] += operand
+        stats.count += 1
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_wire_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: Optional[float] = None
+    useful_flops_ratio: Optional[float] = None
+
+    def table_row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(cost: dict, hlo_text: str,
+                   model_flops: Optional[float] = None,
+                   num_devices: int = 1) -> Roofline:
+    """cost = compiled.cost_analysis(); hlo_text = compiled.as_text().
+
+    Primary numerators come from the trip-count-aware static analyzer
+    (repro.launch.hlo_static) — XLA's cost_analysis counts while bodies once,
+    which undercounts scanned layer stacks by L× and recurrent time scans by
+    S×. All numbers are per-device (the partitioned module).
+    """
+    from repro.launch import hlo_static
+    static = hlo_static.analyze(hlo_text)
+    flops = float(static.flops)
+    bytes_acc = float(static.bytes_accessed)
+    del cost  # xla aggregate kept by the caller for reference only
+    coll = CollectiveStats(
+        operand_bytes=int(static.collective_operand_bytes),
+        wire_bytes=int(static.collective_wire_bytes),
+        by_kind=static.collectives_by_kind,
+        count=sum(v["count"] for v in static.collectives_by_kind.values()))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    collective_s = coll.operand_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    ratio = None
+    if model_flops:
+        # model_flops is global; HLO flops are per-device
+        ratio = model_flops / max(flops * num_devices, 1.0)
+    return Roofline(
+        flops_per_device=flops, hbm_bytes_per_device=bytes_acc,
+        collective_bytes_per_device=float(coll.operand_bytes),
+        collective_wire_bytes=float(coll.wire_bytes),
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=model_flops,
+        useful_flops_ratio=ratio)
+
+
+def model_flops_train(cfg, tokens: int) -> float:
+    """6·N_active·D (fwd+bwd) — the roofline's MODEL_FLOPS."""
+    from repro.models.model import active_param_count
+    return 6.0 * active_param_count(cfg) * tokens
+
+
+def model_flops_decode(cfg, batch: int) -> float:
+    """2·N_active per generated token (fwd only)."""
+    from repro.models.model import active_param_count
+    return 2.0 * active_param_count(cfg) * batch

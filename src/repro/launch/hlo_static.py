@@ -1,0 +1,286 @@
+"""Trip-count-aware static analysis of optimized HLO text.
+
+Why this exists: `compiled.cost_analysis()` counts a `while` body ONCE, but
+every model here runs its layer stack (and the recurrent archs their time
+dimension) under `lax.scan` → FLOPs/bytes/collectives inside loops are
+undercounted by the trip count (88× for mistral-large's layer scan, 4096× for
+xlstm's time scan). The optimized HLO text carries
+`backend_config={"known_trip_count":{"n":...}}` on each while op, so an exact
+static correction is possible:
+
+  1. parse the module into computations (name → instructions),
+  2. build the call graph (while body/condition, fusion calls, to_apply,
+     branches) and propagate a multiplier = product of enclosing trip counts,
+  3. charge per instruction:
+       flops   — dot (2·|result|·K), elementwise math (1/elem), reductions;
+       bytes   — operands + result of top-level (non-fused) instructions,
+                 the standard fusion-boundary HBM-traffic convention;
+       collectives — operand-size census by kind (same conventions as
+                 hlo_analysis), multiplied like everything else.
+
+The result is the per-device roofline numerator used by the §Roofline tables;
+`cost_analysis()` numbers are reported alongside for reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[^}]*\})?")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+# shape = shortest prefix before the first `opcode(` token — tuple shapes may
+# contain /*index=N*/ comments and per-member layout braces, so the shape part
+# cannot be matched structurally; the opcode is always a bare word glued to
+# its operand paren.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s([\w\-]+)\((.*)$")
+_CALLSITE_RE = re.compile(
+    r"(?:calls|body|condition|to_apply|branch_computations)="
+    r"(?:\{(%?[\w.\-]+(?:,\s*%?[\w.\-]+)*)\}|%?([\w.\-]+))")
+_TRIP_RE = re.compile(r'known_trip_count[\\"]*:\s*\{[\\"]*n[\\"]*:[\\"]*(\d+)')
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+ELEMENTWISE_FLOP_OPS = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs", "cosine",
+    "sine", "logistic", "expm1", "log1p", "atan2", "remainder", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "cbrt", "erf",
+}
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "copy", "after-all", "partition-id", "replica-id",
+               "iota"}
+
+
+def _shape_elems_bytes(shape_text: str) -> tuple[int, int]:
+    elems = bytes_ = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[dtype]
+    return elems, bytes_
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    rest: str           # everything after the opening paren
+
+    @property
+    def result_elems(self) -> int:
+        return _shape_elems_bytes(self.shape)[0]
+
+    @property
+    def result_bytes(self) -> int:
+        return _shape_elems_bytes(self.shape)[1]
+
+
+def parse_computations(text: str) -> dict[str, list[Instr]]:
+    comps: dict[str, list[Instr]] = {}
+    current: Optional[str] = None
+    for line in text.splitlines():
+        if current is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m and "{" in line:
+                current = m.group(1)
+                comps[current] = []
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            comps[current].append(Instr(*m.groups()))
+    return comps
+
+
+def _dot_flops(instr: Instr, shapes: dict[str, str]) -> int:
+    """2 × |result| × K, K = product of lhs contracting-dim sizes."""
+    out_elems = instr.result_elems
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
+    ops = _OPERAND_RE.findall(instr.rest)
+    if not m or not ops:
+        return 2 * out_elems
+    lhs_shape = shapes.get(ops[0], "")
+    dims_m = _SHAPE_RE.search(lhs_shape)
+    if not dims_m:
+        return 2 * out_elems
+    lhs_dims = [int(d) for d in dims_m.group(2).split(",") if d]
+    k = 1
+    for idx in (int(i) for i in m.group(1).split(",") if i):
+        if idx < len(lhs_dims):
+            k *= lhs_dims[idx]
+    return 2 * out_elems * k
+
+
+def _group_size(rest: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", rest)
+    if m:
+        return m.group(1).count(",") + 1
+    return 1
+
+
+@dataclasses.dataclass
+class StaticCosts:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_operand_bytes: float = 0.0
+    collective_wire_bytes: float = 0.0
+    collectives_by_kind: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(lambda: {"count": 0,
+                                                     "operand_bytes": 0}))
+
+    def finalize(self) -> "StaticCosts":
+        self.collectives_by_kind = {k: dict(v) for k, v
+                                    in self.collectives_by_kind.items()}
+        return self
+
+
+def analyze(text: str) -> StaticCosts:
+    comps = parse_computations(text)
+    # name → shape per computation for operand lookups
+    shapes_of = {cname: {i.name: i.shape for i in instrs}
+                 for cname, instrs in comps.items()}
+
+    # multipliers: start at 1 for the entry computation; propagate through
+    # call edges, multiplying by trip count at while ops.
+    entry = next((c for c in comps if c.startswith("main")), None)
+    if entry is None:
+        entry = next(iter(comps), None)
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    trip_of: dict[str, float] = {}       # while-body computation → trip count
+    # breadth-first over call edges (the call graph is a DAG in HLO)
+    order = [entry]
+    seen = {entry}
+    idx = 0
+    while idx < len(order):
+        cname = order[idx]
+        idx += 1
+        for instr in comps.get(cname, []):
+            callees = []
+            for m in _CALLSITE_RE.finditer(instr.rest):
+                group = m.group(1) or m.group(2)
+                for callee in group.split(","):
+                    callees.append(callee.strip().lstrip("%"))
+            if not callees:
+                continue
+            k = 1.0
+            if instr.op == "while":
+                t = _TRIP_RE.search(instr.rest)
+                k = float(t.group(1)) if t else 1.0
+            for callee in callees:
+                if callee in comps:
+                    mult[callee] += mult[cname] * k
+                    if instr.op == "while":
+                        trip_of[callee] = max(trip_of.get(callee, 1.0), k)
+                    # propagate the enclosing trip into fusions called from
+                    # a while body (their operands may be scan-stacked too)
+                    elif cname in trip_of:
+                        trip_of.setdefault(callee, trip_of[cname])
+                    if callee not in seen:
+                        seen.add(callee)
+                        order.append(callee)
+
+    fused_bodies = set()
+    for cname, instrs in comps.items():
+        for instr in instrs:
+            if instr.op == "fusion":
+                for m in _CALLSITE_RE.finditer(instr.rest):
+                    group = m.group(1) or m.group(2)
+                    for callee in group.split(","):
+                        fused_bodies.add(callee.strip().lstrip("%"))
+
+    costs = StaticCosts()
+    for cname, instrs in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        shapes = shapes_of[cname]
+        in_fusion = cname in fused_bodies
+        for instr in instrs:
+            op = instr.op
+            # ---- flops ----
+            if op in ("dot", "dot-general"):
+                costs.flops += m * _dot_flops(instr, shapes)
+            elif op == "convolution":
+                costs.flops += m * 2 * instr.result_elems  # lower bound
+            elif op in ELEMENTWISE_FLOP_OPS:
+                costs.flops += m * instr.result_elems
+            elif op == "reduce":
+                costs.flops += m * instr.result_elems
+            # ---- bytes (fusion-boundary convention, scan-aware) ----
+            # Inside a while body with trip count T, scan-stacked tensors
+            # (leading dim == T) are touched one slice per iteration: charge
+            # bytes/T so the loop total equals one full pass. dynamic-slice /
+            # dynamic-update-slice are charged at their slice size (XLA's own
+            # in-place convention), not the full buffer.
+            if not in_fusion and op not in _SKIP_BYTES:
+                trip = trip_of.get(cname, 1.0)
+
+                def _charge(shape_text: str) -> float:
+                    bts = _shape_elems_bytes(shape_text)[1]
+                    if trip > 1:
+                        dm = _SHAPE_RE.search(shape_text)
+                        if dm:
+                            dims = [int(d) for d in dm.group(2).split(",")
+                                    if d]
+                            if dims and dims[0] == int(trip):
+                                return bts / trip
+                    return float(bts)
+
+                if op == "dynamic-slice":
+                    b = 2.0 * instr.result_bytes
+                elif op == "dynamic-update-slice":
+                    opnds = _OPERAND_RE.findall(instr.rest)
+                    upd = (_shape_elems_bytes(shapes[opnds[1]])[1]
+                           if len(opnds) > 1 and opnds[1] in shapes
+                           else instr.result_bytes)
+                    b = 2.0 * upd
+                else:
+                    b = _charge(instr.shape)
+                    for opnd in _OPERAND_RE.findall(instr.rest):
+                        if opnd in shapes:
+                            b += _charge(shapes[opnd])
+                costs.bytes_accessed += m * b
+            # ---- collectives ----
+            base = op.removesuffix("-start").removesuffix("-done")
+            if base in COLLECTIVES and not op.endswith("-done"):
+                g = _group_size(instr.rest)
+                result = instr.result_bytes
+                if base == "all-gather":
+                    operand = result // max(g, 1)
+                    wire = result - operand
+                elif base == "all-reduce":
+                    operand = result
+                    wire = 2 * result * (g - 1) // max(g, 1)
+                elif base == "reduce-scatter":
+                    operand = result * g
+                    wire = result * (g - 1)
+                else:
+                    operand = wire = result
+                costs.collective_operand_bytes += m * operand
+                costs.collective_wire_bytes += m * wire
+                kind = costs.collectives_by_kind[base]
+                kind["count"] += int(m)
+                kind["operand_bytes"] += int(m * operand)
+    return costs.finalize()

@@ -1,0 +1,47 @@
+"""Production mesh construction (TPU v5e pods; CPU stand-ins for the dry-run).
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state — the dry-run must set XLA_FLAGS before any
+jax initialization, and tests/benches must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+SINGLE_POD = (16, 16)                  # 256 chips / pod
+MULTI_POD = (2, 16, 16)                # 2 pods = 512 chips
+SINGLE_AXES = ("data", "model")
+MULTI_AXES = ("pod", "data", "model")
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16×16 ("data","model") or 2×16×16 ("pod","data","model").
+
+    Uses the first `prod(shape)` available devices so one 512-device process
+    can build both meshes.
+    """
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = MULTI_AXES if multi_pod else SINGLE_AXES
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices but only {len(devices)} are "
+            "visible — the dry-run entrypoint must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before any "
+            "jax import")
+    return jax.sharding.Mesh(np.asarray(devices[:need]).reshape(shape), axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over however many devices this host actually has
+    (tests / examples: usually 1×1 on the CPU container)."""
+    need = data * model
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(f"need {need} devices, have {len(devices)}")
+    return jax.sharding.Mesh(
+        np.asarray(devices[:need]).reshape(data, model), ("data", "model"))

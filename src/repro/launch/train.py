@@ -1,0 +1,90 @@
+"""Training driver: end-to-end LM training with compressed gradient consensus.
+
+Runs for real on whatever devices exist (the CPU container: a 1×1 host mesh,
+where the shard_map collectives degenerate but the full codec path — FWHT
+embedding, R-bit pack, decode, error feedback, optimizer — executes exactly).
+
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --reduced \
+      --steps 50 --batch 8 --seq 128 --bits 4
+
+For the ~100M-scale end-to-end deliverable see examples/train_lm.py, which
+drives this module with a fixed recipe.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.checkpoint import save_checkpoint
+from repro.data import TokenStream, batch_for_shape
+from repro.dist import step as step_lib
+from repro.dist.gradcomp import GradCompConfig, wire_bytes_tree
+from repro.launch.mesh import make_host_mesh
+from repro.optimizer import adamw, warmup_cosine
+
+
+def train(cfg, *, steps: int, batch_size: int, seq_len: int,
+          gc: GradCompConfig, lr: float = 3e-4, log_every: int = 10,
+          ckpt_dir: str | None = None, mesh=None, seed: int = 0):
+    mesh = mesh or make_host_mesh(data=1, model=1)
+    opt = adamw(warmup_cosine(lr, max(steps // 20, 1), steps),
+                weight_decay=0.1)
+    tstep = step_lib.make_train_step(cfg, opt, gc, mesh, clip_norm=1.0)
+    params, opt_state, ef = step_lib.init_train_state(
+        cfg, opt, gc, mesh, jax.random.key(seed))
+
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    audit = wire_bytes_tree(params, gc, step_lib.num_workers(mesh))
+    print(f"model={cfg.name} params={n_params/1e6:.1f}M "
+          f"workers={step_lib.num_workers(mesh)} strategy={gc.strategy} "
+          f"R={gc.effective_bits} bits/dim")
+    print(f"wire audit: f32={audit['f32_bytes']/2**20:.1f}MiB → "
+          f"payload={audit['payload_bytes']/2**20:.1f}MiB "
+          f"({audit['compression_x']:.1f}× smaller)")
+
+    losses = []
+    t0 = time.time()
+    for step in range(steps):
+        batch = batch_for_shape(cfg, batch_size, seq_len, step, seed)
+        params, opt_state, ef, metrics = tstep(params, opt_state, ef, batch)
+        losses.append(float(metrics["loss"]))
+        if step % log_every == 0 or step == steps - 1:
+            dt = time.time() - t0
+            print(f"step {step:5d}  loss {losses[-1]:.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  "
+                  f"({dt:.1f}s)", flush=True)
+    if ckpt_dir:
+        path = save_checkpoint(ckpt_dir, steps, {"params": params,
+                                                 "opt_state": opt_state})
+        print(f"checkpoint → {path}")
+    return params, losses
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="yi-6b", choices=configs.ARCH_NAMES)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale variant (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--bits", type=int, default=4, choices=(1, 2, 4, 8))
+    ap.add_argument("--strategy", default="allgather_packed",
+                    choices=("psum", "psum_decoded", "allgather_packed"))
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = (configs.get_reduced(args.arch) if args.reduced
+           else configs.get(args.arch))
+    gc = GradCompConfig(bits=args.bits, strategy=args.strategy)
+    train(cfg, steps=args.steps, batch_size=args.batch, seq_len=args.seq,
+          gc=gc, lr=args.lr, ckpt_dir=args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,279 @@
+"""Decode (serving) path: one-token steps against explicit caches.
+
+Per-layer caches are stacked on a leading L axis so the whole stack runs as a
+single `lax.scan` over (block params, block cache) — mirrors the training
+forward. Cache kinds per block family:
+
+  attention    — KV cache (L, B, C, K, dh). For sliding-window attention the
+                 cache is a ring buffer of C = window slots (position p lives
+                 in slot p % C); softmax is permutation invariant so ring order
+                 never needs unrotating, and slot validity is simply
+                 slot < pos. This is what bounds long_500k decode state for
+                 hymba / mixtral to the window, not the 524k sequence.
+  hybrid       — KV ring cache + Mamba state (L, B, di, n): O(1) per token.
+  xlstm_pair   — mLSTM matrix state (L, B, H, dh, dh) + sLSTM scalar state:
+                 O(1) per token, the reason xlstm runs long_500k natively.
+  moe          — KV cache only (experts are stateless).
+  encoder      — no decode (raises; callers consult cfg.decode_supported).
+
+`pos` is a per-slot (B,) counter: the assigned decode shapes advance in
+lockstep, and the continuous-batching scheduler (repro/serve) refills
+finished slots independently mid-flight.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models import moe as moe_lib
+from repro.models.model import ModelConfig
+
+
+class DecodeState(NamedTuple):
+    """Stacked per-layer caches + per-slot position counters.
+
+    `pos` is (B,) — each batch slot advances independently, which is what
+    lets the continuous-batching scheduler (repro/serve) refill finished
+    slots with fresh prompts mid-flight."""
+
+    caches: dict            # leaves with leading (num_scanned,) axis
+    pos: jax.Array          # (B,) int32 — tokens already in each slot
+
+
+# ---------------------------------------------------------------------------
+# State construction
+# ---------------------------------------------------------------------------
+def cache_len(cfg: ModelConfig, max_seq: int) -> int:
+    return cfg.decode_cache_len(max_seq)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int,
+                      dtype=None) -> DecodeState:
+    """Zero caches sized for decoding up to `max_seq` total positions."""
+    if not cfg.decode_supported:
+        raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+    dt = dtype or cfg.compute_dtype
+    nl = cfg.num_scanned
+    c = cache_len(cfg, max_seq)
+    caches: dict = {}
+    if cfg.block in ("attn_mlp", "attn_moe", "attn_moe_dense", "hybrid"):
+        if cfg.kv_quant_bits:
+            from repro.models import kvquant
+            bits = cfg.kv_quant_bits
+            wpv = cfg.dh * bits // 32
+            for side in ("k", "v"):
+                caches[f"{side}_words"] = jnp.zeros(
+                    (nl, batch, c, cfg.num_kv_heads, wpv), jnp.int32)
+                caches[f"{side}_scale"] = jnp.zeros(
+                    (nl, batch, c, cfg.num_kv_heads), jnp.float32)
+            caches["signs"] = jnp.stack([
+                kvquant.head_signs(0, layer, cfg.num_kv_heads, cfg.dh)
+                for layer in range(nl)])
+        else:
+            caches["k"] = jnp.zeros((nl, batch, c, cfg.num_kv_heads, cfg.dh),
+                                    dt)
+            caches["v"] = jnp.zeros((nl, batch, c, cfg.num_kv_heads, cfg.dh),
+                                    dt)
+    if cfg.block == "hybrid":
+        caches["ssm_h"] = jnp.zeros((nl, batch, cfg.di, cfg.ssm_state),
+                                    jnp.float32)
+    if cfg.block == "xlstm_pair":
+        dh = cfg.d_model // cfg.num_heads
+        caches["m_c"] = jnp.zeros((nl, batch, cfg.num_heads, dh, dh), jnp.float32)
+        caches["m_n"] = jnp.zeros((nl, batch, cfg.num_heads, dh), jnp.float32)
+        caches["m_m"] = jnp.full((nl, batch, cfg.num_heads), -1e30, jnp.float32)
+        caches["s_c"] = jnp.zeros((nl, batch, cfg.d_model), jnp.float32)
+        caches["s_n"] = jnp.zeros((nl, batch, cfg.d_model), jnp.float32)
+        caches["s_h"] = jnp.zeros((nl, batch, cfg.d_model), jnp.float32)
+    return DecodeState(caches=caches, pos=jnp.zeros((batch,), jnp.int32))
+
+
+def decode_state_specs(cfg: ModelConfig, batch: int, max_seq: int) -> DecodeState:
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+    shapes = jax.eval_shape(
+        lambda: init_decode_state(cfg, batch, max_seq))
+    return shapes
+
+
+# ---------------------------------------------------------------------------
+# One-layer decode
+# ---------------------------------------------------------------------------
+def _attn_decode(cfg: ModelConfig, p: dict, cache: dict, h: jax.Array,
+                 pos: jax.Array, c: int):
+    """Self-attention for one new token; returns (out, new k/v cache)."""
+    b = h.shape[0]
+    x = L.rmsnorm(h, p["attn_norm"], cfg.norm_eps)
+    q = (x @ p["wq"]).reshape(b, 1, cfg.num_heads, cfg.dh)
+    k = (x @ p["wk"]).reshape(b, 1, cfg.num_kv_heads, cfg.dh)
+    v = (x @ p["wv"]).reshape(b, 1, cfg.num_kv_heads, cfg.dh)
+    positions = pos[:, None]                     # (B, 1) per-slot positions
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    rows = jnp.arange(b)
+    slot = jnp.mod(pos, c)                      # (B,) ring slots
+    kv_len = jnp.minimum(pos + 1, c)            # (B,) valid lengths
+
+    if cfg.kv_quant_bits:                        # NDSC-packed cache path
+        from repro.models import kvquant
+        bits = cfg.kv_quant_bits
+        signs = cache["signs"]                   # (K, dh) — this layer's D
+        new_cache = {"signs": signs}
+        for side, new in (("k", k), ("v", v)):
+            words, scale = kvquant.encode_entry(new, signs, bits)
+            new_cache[f"{side}_words"] = \
+                cache[f"{side}_words"].at[rows, slot].set(words[:, 0])
+            new_cache[f"{side}_scale"] = \
+                cache[f"{side}_scale"].at[rows, slot].set(scale[:, 0])
+        o = kvquant.quant_decode_attention(
+            q, (new_cache["k_words"], new_cache["k_scale"],
+                new_cache["v_words"], new_cache["v_scale"]),
+            kv_len, signs, bits)
+        out = o.reshape(b, 1, cfg.q_dim) @ p["wo"]
+        return out, new_cache
+
+    k_cache = cache["k"].at[rows, slot].set(k[:, 0])
+    v_cache = cache["v"].at[rows, slot].set(v[:, 0])
+    o = L.decode_attention(q, k_cache, v_cache, kv_len=kv_len)
+    out = o.reshape(b, 1, cfg.q_dim) @ p["wo"]
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def block_decode(cfg: ModelConfig, p: dict, cache: dict, h: jax.Array,
+                 pos: jax.Array, c: int):
+    """One scanned unit, one token. h: (B, 1, d) → (h, new cache)."""
+    new_cache: dict = {}
+    if cfg.block in ("attn_mlp", "attn_moe", "attn_moe_dense"):
+        attn_out, kv = _attn_decode(cfg, p, cache, h, pos, c)
+        new_cache.update(kv)
+        h = h + attn_out
+    if cfg.block == "hybrid":
+        attn_out, kv = _attn_decode(cfg, p, cache, h, pos, c)
+        new_cache.update(kv)
+        x = L.rmsnorm(h, p["attn_norm"], cfg.norm_eps)
+        mamba_out, ssm_h = ssm_lib.mamba_decode_step(p["mamba"], x,
+                                                     cache["ssm_h"])
+        new_cache["ssm_h"] = ssm_h
+        h = h + 0.5 * (attn_out + mamba_out)
+    if cfg.block in ("attn_mlp", "hybrid"):
+        x = L.rmsnorm(h, p["mlp_norm"], cfg.norm_eps)
+        h = h + L.swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+    if cfg.block in ("attn_moe", "attn_moe_dense"):
+        x = L.rmsnorm(h, p["moe_norm"], cfg.norm_eps)
+        moe_out = moe_lib.moe_ffn(
+            x, p["router"], p["e_gate"], p["e_up"], p["e_down"],
+            top_k=cfg.top_k, capacity_factor=cfg.capacity_factor)
+        if cfg.block == "attn_moe_dense":
+            xm = L.rmsnorm(h, p["mlp_norm"], cfg.norm_eps)
+            moe_out = moe_out + L.swiglu(xm, p["w_gate"], p["w_up"], p["w_down"])
+        h = h + moe_out
+    if cfg.block == "xlstm_pair":
+        x = L.rmsnorm(h, p["m_norm"], cfg.norm_eps)
+        m_state = xlstm_lib.MLSTMState(cache["m_c"], cache["m_n"], cache["m_m"])
+        m_out, m_state = xlstm_lib.mlstm_decode_step(p["mlstm"], x,
+                                                     cfg.num_heads, m_state)
+        h = h + m_out
+        x = L.rmsnorm(h, p["s_norm"], cfg.norm_eps)
+        s_state = xlstm_lib.SLSTMState(cache["s_c"], cache["s_n"], cache["s_h"])
+        s_out, s_state = xlstm_lib.slstm_decode_step(p["slstm"], x,
+                                                     cfg.num_heads, s_state)
+        h = h + s_out
+        new_cache.update(m_c=m_state.c, m_n=m_state.n, m_m=m_state.m,
+                         s_c=s_state.c, s_n=s_state.n, s_h=s_state.h)
+    return h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Full-stack decode step
+# ---------------------------------------------------------------------------
+def decode_step(cfg: ModelConfig, params: dict, state: DecodeState,
+                tokens: jax.Array):
+    """tokens: (B, 1) int32 → (logits (B, padded_vocab) f32, new state)."""
+    if not cfg.decode_supported:
+        raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+    dt = cfg.compute_dtype
+    b = tokens.shape[0]
+    h = L.embed(tokens, params["embed"]).astype(dt)          # (B, 1, d)
+    if "k" in state.caches:
+        c = state.caches["k"].shape[2]
+    elif "k_words" in state.caches:
+        c = state.caches["k_words"].shape[2]
+    else:
+        c = 0
+
+    def body(hh, xs):
+        block_p, block_cache = xs
+        hh, new_cache = block_decode(cfg, block_p, block_cache, hh,
+                                     state.pos, c)
+        return hh, new_cache
+
+    h, new_caches = jax.lax.scan(body, h, (params["blocks"], state.caches))
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = (h[:, 0] @ params["head"]).astype(jnp.float32)  # (B, V)
+    return logits, DecodeState(caches=new_caches, pos=state.pos + 1)
+
+
+def greedy_token(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+
+
+# ---------------------------------------------------------------------------
+# Prefill: run the training forward once, collect the caches
+# ---------------------------------------------------------------------------
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            max_seq: int):
+    """tokens: (B, S) prompt → (last-token logits (B, V), DecodeState at S).
+
+    Uses the blockwise training forward with collect_kv; for sliding-window
+    ring caches only the last `window` positions are written (ring layout
+    slot = position % C, matching decode_step's insert rule).
+    """
+    if not cfg.decode_supported:
+        raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+    dt = cfg.compute_dtype
+    b, s = tokens.shape
+    c = cache_len(cfg, max_seq)
+    from repro.models.model import block_forward  # local import (cycle)
+    h = L.embed(tokens, params["embed"]).astype(dt)
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    state = init_decode_state(cfg, b, max_seq)
+
+    def body(hh, block_p):
+        hh, _, kv = block_forward(cfg, block_p, hh, positions, collect_kv=True)
+        if kv is None:
+            return hh, {}
+        k, v = kv
+        if s <= c:
+            kc = jnp.zeros((b, c) + k.shape[2:], dt).at[:, :s].set(k)
+            vc = jnp.zeros((b, c) + v.shape[2:], dt).at[:, :s].set(v)
+        else:  # ring: last c positions, at slots (s-c+i) % c
+            tail_k, tail_v = k[:, s - c:], v[:, s - c:]
+            slots = jnp.mod(jnp.arange(s - c, s), c)
+            kc = jnp.zeros((b, c) + k.shape[2:], dt).at[:, slots].set(tail_k)
+            vc = jnp.zeros((b, c) + v.shape[2:], dt).at[:, slots].set(tail_v)
+        return hh, {"k": kc, "v": vc}
+
+    if cfg.block in ("attn_mlp", "attn_moe", "attn_moe_dense"):
+        h, kv_stack = jax.lax.scan(body, h, params["blocks"])
+        caches = dict(state.caches)
+        caches.update(kv_stack)
+        state = DecodeState(caches=caches, pos=jnp.full((b,), s, jnp.int32))
+        h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        logits = (h[:, -1] @ params["head"]).astype(jnp.float32)
+        return logits, state
+
+    # Recurrent / hybrid families: prefill by stepping decode token-by-token
+    # (correct for any family; used by examples at small scale).
+    def step(carry, t):
+        st, _ = carry
+        logits, st = decode_step(cfg, params, st, tokens[:, t][:, None])
+        return (st, logits), None
+
+    (state, logits), _ = jax.lax.scan(
+        step, (state, jnp.zeros((b, params["head"].shape[-1]), jnp.float32)),
+        jnp.arange(s))
+    return logits, state

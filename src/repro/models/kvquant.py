@@ -1,0 +1,90 @@
+"""NDSC-quantized KV cache (beyond-paper: the codec applied to serving).
+
+Each cache entry — one (dh,)-vector per (position, kv-head) — is stored
+Hadamard-rotated (fixed per-head sign vector D_h, shared-randomness contract
+as in the gradient codec) and uniformly quantized at `bits` per element with
+a per-vector ‖·‖∞ scale. The democratic flattening is exactly why this works
+at 4–8 bits: attention K/V vectors have outlier channels, and rotating
+spreads them so one scale covers the vector (the same argument as paper
+Thm. 1, at N = dh).
+
+Orthonormality does the rest: ⟨q, k⟩ = ⟨Hq', Hk'⟩, so queries are rotated
+once per step and attention runs entirely in the rotated basis; only the
+(G, dh) output accumulator is inverse-rotated. Deployment path is the fused
+Pallas kernel (repro/kernels/quantdecode.py) — packed words stream HBM→VMEM
+once, bits/32 of the f32 traffic.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref as kernel_ref
+from repro.kernels import quantdecode as qd_kernel
+
+
+class QuantKVCache(NamedTuple):
+    k_words: jax.Array    # (L, B, C, K, dh·bits/32) int32
+    k_scale: jax.Array    # (L, B, C, K) f32
+    v_words: jax.Array
+    v_scale: jax.Array
+
+
+def head_signs(seed: int, layer: jax.Array | int, num_kv: int,
+               dh: int) -> jax.Array:
+    """±1 rotation signs per (kv-head, channel), deterministic per layer."""
+    key = jax.random.fold_in(jax.random.key(seed ^ 0x5EED), layer)
+    return jax.random.rademacher(key, (num_kv, dh),
+                                 dtype=jnp.int8).astype(jnp.float32)
+
+
+def rotate(x: jax.Array, signs: jax.Array) -> jax.Array:
+    """x: (..., K, dh) → H(D x): rotated basis."""
+    return kernel_ops.fwht(x * signs)
+
+
+def init_cache(num_layers: int, batch: int, cache_len: int, num_kv: int,
+               dh: int, bits: int) -> QuantKVCache:
+    wpv = dh * bits // 32
+    z = lambda *s: jnp.zeros(s, jnp.int32)
+    zf = lambda *s: jnp.zeros(s, jnp.float32)
+    return QuantKVCache(
+        k_words=z(num_layers, batch, cache_len, num_kv, wpv),
+        k_scale=zf(num_layers, batch, cache_len, num_kv),
+        v_words=z(num_layers, batch, cache_len, num_kv, wpv),
+        v_scale=zf(num_layers, batch, cache_len, num_kv),
+    )
+
+
+def encode_entry(x: jax.Array, signs: jax.Array, bits: int):
+    """x: (B, 1, K, dh) new K or V → (words (B,1,K,wpv), scale (B,1,K))."""
+    xr = rotate(x.astype(jnp.float32), signs)
+    scale = jnp.max(jnp.abs(xr), axis=-1)
+    words = kernel_ops.quantize_pack(xr, scale[..., None], bits)
+    return words, scale
+
+
+def quant_decode_attention(q: jax.Array, cache_layer: tuple, kv_len,
+                           signs: jax.Array, bits: int,
+                           use_pallas: bool = False) -> jax.Array:
+    """q: (B, 1, H, dh); cache_layer: (kw, ks, vw, vs) for ONE layer with
+    shapes (B, C, K, …). Returns (B, 1, H, dh)."""
+    b, _, h, dh = q.shape
+    kw, ks, vw, vs = cache_layer
+    kh = kw.shape[2]
+    g = h // kh
+    scale = dh ** -0.5
+    qg = q.reshape(b, kh, g, dh).astype(jnp.float32) * scale
+    qr = kernel_ops.fwht(qg * signs[:, None, :])          # rotate queries
+    if use_pallas:
+        out = qd_kernel.quant_decode_attention_pallas(
+            qr, kw, ks, vw, vs, jnp.broadcast_to(kv_len, (b,)), bits=bits)
+    else:
+        out = kernel_ref.quant_decode_attention(
+            qr, kw, ks, vw, vs, jnp.broadcast_to(kv_len, (b,)), bits=bits)
+    # inverse of the per-head D sign (H already inverted inside)
+    out = out * signs[:, None, :]
+    return out.reshape(b, 1, h, dh).astype(q.dtype)

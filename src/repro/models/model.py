@@ -1,0 +1,332 @@
+"""Composable model zoo: one config schema, six block families.
+
+Block families (selected by ModelConfig.block):
+  attn_mlp        — dense decoder (phi3 / yi / llama3.2 / mistral-large / pixtral)
+  attn_moe        — attention + top-k MoE FFN (mixtral, SWA)
+  attn_moe_dense  — attention + [dense-residual MLP ∥ MoE] (arctic)
+  hybrid          — parallel attention + Mamba heads, then MLP (hymba)
+  xlstm_pair      — (mLSTM, sLSTM) pair per scanned unit (xlstm)
+  encoder         — bidirectional encoder, frame classifier head (hubert)
+
+All stacks run as `lax.scan` over stacked layer weights (compile time O(1) in
+depth), with optional `jax.checkpoint` remat per layer. Decode paths carry
+explicit caches (ring-buffered KV for sliding-window attention, O(1) SSM /
+xLSTM state), which is what makes decode_32k and long_500k lower with bounded
+memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    block: str = "attn_mlp"
+    causal: bool = True
+    attention_kind: str = "full"        # full | sliding
+    window: int = 4096
+    rope_theta: float = 500000.0
+    # moe
+    num_experts: int = 0
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    moe_aux_coeff: float = 0.01
+    # ssm (hybrid)
+    ssm_state: int = 16
+    d_inner: Optional[int] = None
+    ssm_scan: str = "sequential"         # or "associative" (log-depth,
+    #   trades a (B,S,di,n) intermediate for sequence parallelism — §Perf)
+    # io / frontends (vlm & audio backbones consume precomputed embeddings)
+    frontend: Optional[str] = None       # None | vision | audio
+    num_patches: int = 1024
+    norm_eps: float = 1e-5
+    dtype: str = "float32"
+    vocab_pad_multiple: int = 256
+    remat: bool = True
+    seq_parallel: bool = False           # shard S over "model" at block edges
+    kv_quant_bits: Optional[int] = None  # NDSC-packed KV cache (4 or 8);
+    #   decode reads bits/32 of the f32 cache bytes (fused Pallas kernel on
+    #   TPU — repro/kernels/quantdecode.py)
+    source: str = ""                     # citation for the config
+
+    # -- derived -------------------------------------------------------------
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.dh
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.dh
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return -(-self.vocab_size // m) * m
+
+    @property
+    def di(self) -> int:
+        return self.d_inner or self.d_model
+
+    @property
+    def num_scanned(self) -> int:
+        if self.block == "xlstm_pair":
+            if self.num_layers % 2:
+                raise ValueError("xlstm_pair needs an even layer count")
+            return self.num_layers // 2
+        return self.num_layers
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def decode_supported(self) -> bool:
+        return self.block != "encoder"
+
+    @property
+    def subquadratic(self) -> bool:
+        """Can this arch run long_500k (sub-quadratic sequence mixing)?"""
+        return (self.block in ("xlstm_pair",)
+                or self.attention_kind == "sliding")
+
+    def window_or_none(self) -> Optional[int]:
+        return self.window if self.attention_kind == "sliding" else None
+
+    def decode_cache_len(self, seq_len: int) -> int:
+        if self.attention_kind == "sliding":
+            return min(self.window, seq_len)
+        return seq_len
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+def _norm(d, dtype):
+    return jnp.ones((d,), dtype)
+
+
+def _dense(key, shape, dtype, scale=0.02):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def init_block(key: jax.Array, cfg: ModelConfig) -> dict:
+    dt = cfg.compute_dtype
+    d = cfg.d_model
+    ks = iter(jax.random.split(key, 24))
+    p: dict[str, Any] = {}
+    has_attn = cfg.block in ("attn_mlp", "attn_moe", "attn_moe_dense",
+                             "hybrid", "encoder")
+    if has_attn:
+        p["attn_norm"] = _norm(d, dt)
+        p["wq"] = _dense(next(ks), (d, cfg.q_dim), dt)
+        p["wk"] = _dense(next(ks), (d, cfg.kv_dim), dt)
+        p["wv"] = _dense(next(ks), (d, cfg.kv_dim), dt)
+        p["wo"] = _dense(next(ks), (cfg.q_dim, d), dt)
+    if cfg.block == "hybrid":
+        p["mamba"] = ssm_lib.init_mamba(next(ks), d, cfg.di, cfg.ssm_state, dt)
+    if cfg.block in ("attn_mlp", "hybrid", "attn_moe_dense"):
+        p["mlp_norm"] = _norm(d, dt)
+        p["w_gate"] = _dense(next(ks), (d, cfg.d_ff), dt)
+        p["w_up"] = _dense(next(ks), (d, cfg.d_ff), dt)
+        p["w_down"] = _dense(next(ks), (cfg.d_ff, d), dt)
+    if cfg.block == "encoder":
+        p["mlp_norm"] = _norm(d, dt)
+        p["w_up"] = _dense(next(ks), (d, cfg.d_ff), dt)
+        p["w_down"] = _dense(next(ks), (cfg.d_ff, d), dt)
+    if cfg.block in ("attn_moe", "attn_moe_dense"):
+        p["moe_norm"] = _norm(d, dt)
+        p["router"] = _dense(next(ks), (d, cfg.num_experts), dt)
+        p["e_gate"] = _dense(next(ks), (cfg.num_experts, d, cfg.d_ff), dt)
+        p["e_up"] = _dense(next(ks), (cfg.num_experts, d, cfg.d_ff), dt)
+        p["e_down"] = _dense(next(ks), (cfg.num_experts, cfg.d_ff, d), dt)
+    if cfg.block == "xlstm_pair":
+        p["m_norm"] = _norm(d, dt)
+        p["mlstm"] = xlstm_lib.init_mlstm(next(ks), d, cfg.num_heads, dt)
+        p["s_norm"] = _norm(d, dt)
+        p["slstm"] = xlstm_lib.init_slstm(next(ks), d, cfg.num_heads, dt)
+    return p
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    dt = cfg.compute_dtype
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    block_keys = jax.random.split(k_blocks, cfg.num_scanned)
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(block_keys)
+    params = {"blocks": blocks, "final_norm": _norm(cfg.d_model, dt)}
+    if cfg.frontend != "audio":
+        params["embed"] = _dense(k_embed, (cfg.padded_vocab, cfg.d_model), dt)
+    params["head"] = _dense(k_head, (cfg.d_model, cfg.padded_vocab), dt)
+    return params
+
+
+def param_count(cfg: ModelConfig) -> int:
+    import math
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+    return sum(math.prod(x.shape) for x in jax.tree.leaves(shapes))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Params touched per token (MoE: top-k of E experts active)."""
+    total = param_count(cfg)
+    if cfg.num_experts:
+        expert_leaf = 3 * cfg.num_experts * cfg.d_model * cfg.d_ff * cfg.num_layers
+        active = expert_leaf * cfg.top_k // cfg.num_experts
+        return total - expert_leaf + active
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Block forward (training / prefill share this; decode has its own path)
+# ---------------------------------------------------------------------------
+def _attn_qkv(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array):
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, cfg.num_heads, cfg.dh)
+    k = (x @ p["wk"]).reshape(b, s, cfg.num_kv_heads, cfg.dh)
+    v = (x @ p["wv"]).reshape(b, s, cfg.num_kv_heads, cfg.dh)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _self_attention(cfg: ModelConfig, p: dict, h: jax.Array,
+                    positions: jax.Array, collect_kv: bool):
+    b, s, _ = h.shape
+    x = L.rmsnorm(h, p["attn_norm"], cfg.norm_eps)
+    q, k, v = _attn_qkv(cfg, p, x, positions)
+    o = L.blockwise_attention(q, k, v, causal=cfg.causal,
+                              window=cfg.window_or_none())
+    out = o.reshape(b, s, cfg.q_dim) @ p["wo"]
+    return (out, (k, v)) if collect_kv else (out, None)
+
+
+def block_forward(cfg: ModelConfig, p: dict, h: jax.Array,
+                  positions: jax.Array, collect_kv: bool = False):
+    """One scanned unit. Returns (h, aux_loss, kv or None)."""
+    aux = jnp.zeros((), jnp.float32)
+    kv = None
+    if cfg.block in ("attn_mlp", "attn_moe", "attn_moe_dense", "encoder"):
+        attn_out, kv = _self_attention(cfg, p, h, positions, collect_kv)
+        h = h + attn_out
+    if cfg.block == "hybrid":
+        attn_out, kv = _self_attention(cfg, p, h, positions, collect_kv)
+        x = L.rmsnorm(h, p["attn_norm"], cfg.norm_eps)
+        scan_fn = (ssm_lib.mamba_assoc_scan if cfg.ssm_scan == "associative"
+                   else ssm_lib.mamba_scan)
+        mamba_out, _ = scan_fn(p["mamba"], x)
+        h = h + 0.5 * (attn_out + mamba_out)
+    if cfg.block in ("attn_mlp", "hybrid"):
+        x = L.rmsnorm(h, p["mlp_norm"], cfg.norm_eps)
+        h = h + L.swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+    if cfg.block == "encoder":
+        x = L.rmsnorm(h, p["mlp_norm"], cfg.norm_eps)
+        h = h + L.gelu_mlp(x, p["w_up"], p["w_down"])
+    if cfg.block in ("attn_moe", "attn_moe_dense"):
+        x = L.rmsnorm(h, p["moe_norm"], cfg.norm_eps)
+        moe_out, moe_aux = moe_lib.moe_ffn(
+            x, p["router"], p["e_gate"], p["e_up"], p["e_down"],
+            top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+            return_aux=True)
+        aux = aux + moe_aux["load_balance_loss"]
+        if cfg.block == "attn_moe_dense":       # arctic: dense-residual ∥ MoE
+            xm = L.rmsnorm(h, p["mlp_norm"], cfg.norm_eps)
+            moe_out = moe_out + L.swiglu(xm, p["w_gate"], p["w_up"], p["w_down"])
+        h = h + moe_out
+    if cfg.block == "xlstm_pair":
+        x = L.rmsnorm(h, p["m_norm"], cfg.norm_eps)
+        m_out, _ = xlstm_lib.mlstm_block(p["mlstm"], x, cfg.num_heads)
+        h = h + m_out
+        x = L.rmsnorm(h, p["s_norm"], cfg.norm_eps)
+        s_out, _ = xlstm_lib.slstm_block(p["slstm"], x, cfg.num_heads)
+        h = h + s_out
+    return h, aux, kv
+
+
+# ---------------------------------------------------------------------------
+# Full forward / loss
+# ---------------------------------------------------------------------------
+def _embed_inputs(cfg: ModelConfig, params: dict, batch: dict):
+    """Returns (h, positions, targets)."""
+    dt = cfg.compute_dtype
+    if cfg.frontend == "audio":
+        h = batch["embeds"].astype(dt)
+        positions = jnp.arange(h.shape[1], dtype=jnp.int32)[None, :]
+        return h, positions, batch.get("targets")
+    if cfg.frontend == "vision":
+        img = batch["image_embeds"].astype(dt)            # (B, P, d)
+        toks = batch["tokens"]                            # (B, S_text + 1)
+        tok_in, targets = toks[:, :-1], toks[:, 1:]
+        th = L.embed(tok_in, params["embed"]).astype(dt)
+        h = jnp.concatenate([img, th], axis=1)
+        positions = jnp.arange(h.shape[1], dtype=jnp.int32)[None, :]
+        # only text positions contribute to the loss
+        pad = jnp.full(img.shape[:2], -1, targets.dtype)
+        return h, positions, jnp.concatenate([pad, targets], axis=1)
+    toks = batch["tokens"]
+    tok_in, targets = toks[:, :-1], toks[:, 1:]
+    h = L.embed(tok_in, params["embed"]).astype(dt)
+    positions = jnp.arange(h.shape[1], dtype=jnp.int32)[None, :]
+    return h, positions, targets
+
+
+def forward_hidden(cfg: ModelConfig, params: dict, h: jax.Array,
+                   positions: jax.Array):
+    """Scan the block stack. Returns (h, total_aux)."""
+    seq_spec = None
+    if cfg.seq_parallel:
+        # Megatron-SP (§Perf iteration 3): pin the residual stream to
+        # sequence-sharded over the tensor-parallel axis at block boundaries.
+        # GSPMD then lowers the per-block boundary communication as
+        # reduce-scatter + all-gather pairs instead of full all-reduces, and
+        # the resident activations between blocks shrink by the model-axis
+        # size. Raw PartitionSpec: resolves against the context mesh (works
+        # under shard_map's manual data axes; "model" stays auto).
+        from jax.sharding import PartitionSpec as P
+        seq_spec = P(None, "model", None)
+
+    def body(carry, block_p):
+        hh, aux = carry
+        if seq_spec is not None:
+            hh = jax.lax.with_sharding_constraint(hh, seq_spec)
+        hh, a, _ = block_forward(cfg, block_p, hh, positions)
+        return (hh, aux + a), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    (h, aux), _ = jax.lax.scan(fn, (h, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    return L.rmsnorm(h, params["final_norm"], cfg.norm_eps), aux
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    h, positions, targets = _embed_inputs(cfg, params, batch)
+    h, aux = forward_hidden(cfg, params, h, positions)
+    ce = L.chunked_softmax_xent(h, params["head"], targets)
+    return ce + cfg.moe_aux_coeff * aux
+
+
+def logits_fn(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    """Full (B, S, V) logits — small models / tests only."""
+    h, positions, _ = _embed_inputs(cfg, params, batch)
+    h, _ = forward_hidden(cfg, params, h, positions)
+    return (h @ params["head"]).astype(jnp.float32)

@@ -1,0 +1,94 @@
+"""Mixture-of-Experts block: top-k routing with sort-based capacity dispatch.
+
+Tokens are dispatched into a dense (E, C, d) buffer via scatter (capacity
+C = ⌈cf·k·T/E⌉, overflow dropped — GShard-style), experts run as one batched
+einsum, and outputs are combined with the router weights. Compiled FLOPs are
+therefore ≈ cf × the *active* FLOPs (top-k of E), not E× — which keeps the
+roofline's MODEL_FLOPS/HLO_FLOPs ratio honest for arctic's 128 experts.
+
+Expert weights are sharded over the `model` axis on the expert dim when
+E % model_axis == 0 (arctic: 128/16 = 8 experts/shard), else on d_ff
+(mixtral: 8 experts, d_ff 16384/16). Token → expert traffic then lowers to
+the expected all-to-all / all-gather pattern under GSPMD.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _hint_expert_sharding(x: jax.Array) -> jax.Array:
+    """Pin dim 0 (experts) to the tensor-parallel axis when legal.
+
+    §Perf iteration (MoE dispatch): without this hint GSPMD materializes the
+    full (E, C, d) dispatch buffer replicated and all-reduces it across the
+    model axis every layer (≈4 TB/device/step on arctic×prefill_32k). With
+    the output of the scatter pinned expert-sharded, the scatter partitions
+    by index-masking per shard and the buffer never crosses the ICI.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if (mesh is not None and "model" in mesh.axis_names
+            and mesh.shape["model"] > 1
+            and x.shape[0] % mesh.shape["model"] == 0):
+        from jax.sharding import PartitionSpec as P
+        spec = P("model", *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, spec)
+    return x
+
+
+def moe_ffn(x: jax.Array, router: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+            w_down: jax.Array, *, top_k: int, capacity_factor: float = 1.25,
+            return_aux: bool = False):
+    """x: (B, S, d); router: (d, E); w_gate/up: (E, d, f); w_down: (E, f, d)."""
+    b, s, d = x.shape
+    e = router.shape[-1]
+    t = b * s
+    flat = x.reshape(t, d)
+
+    logits = (flat @ router).astype(jnp.float32)             # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, expert_idx = jax.lax.top_k(probs, top_k)        # (T, k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+
+    flat_e = expert_idx.reshape(t * top_k)                   # assignment list
+    flat_w = weights.reshape(t * top_k).astype(x.dtype)
+    token_of = jnp.arange(t * top_k, dtype=jnp.int32) // top_k
+
+    capacity = max(1, int(capacity_factor * t * top_k / e))
+    # rank of each assignment within its expert (stable sort by expert id)
+    order = jnp.argsort(flat_e, stable=True)
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.cumsum(counts) - counts
+    rank_sorted = jnp.arange(t * top_k, dtype=jnp.int32) - starts[flat_e[order]]
+    rank = jnp.zeros(t * top_k, jnp.int32).at[order].set(rank_sorted)
+    keep = rank < capacity
+    rank_c = jnp.minimum(rank, capacity - 1)
+
+    # dispatch: 2D-indexed scatter into the expert-sharded (E, C, d) buffer;
+    # dropped assignments contribute zero instead of an OOB slot so the
+    # scatter stays partitionable on the expert dim.
+    buf = jnp.zeros((e, capacity, d), x.dtype)
+    src = flat[token_of] * keep.astype(x.dtype)[:, None]
+    buf = buf.at[flat_e, rank_c].add(src)
+    buf = _hint_expert_sharding(buf)
+
+    # expert compute: batched SwiGLU
+    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate))
+    up = jnp.einsum("ecd,edf->ecf", buf, w_up)
+    y = jnp.einsum("ecf,efd->ecd", gate * up, w_down)
+    y = _hint_expert_sharding(y)
+
+    # combine
+    gathered = y[flat_e, rank_c]
+    gathered = gathered * (flat_w * keep.astype(x.dtype))[:, None]
+    out = jnp.zeros((t, d), x.dtype).at[token_of].add(gathered)
+    out = out.reshape(b, s, d)
+
+    if return_aux:
+        # load-balance auxiliary loss (Switch-style): E · Σ_e f_e · p_e
+        frac_tokens = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], e), axis=0)
+        frac_probs = jnp.mean(probs, axis=0)
+        aux = e * jnp.sum(frac_tokens * frac_probs)
+        dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+        return out, {"load_balance_loss": aux, "drop_fraction": dropped}
+    return out

@@ -1,0 +1,166 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory) [arXiv:2405.04517].
+
+mLSTM recurrence (per head, exponential gating with stabilizer m):
+    m_t = max(f̃_t + m_{t−1}, ĩ_t)
+    i'  = exp(ĩ_t − m_t),  f' = exp(f̃_t + m_{t−1} − m_t)
+    C_t = f'·C_{t−1} + i'·v_t k_tᵀ ,  n_t = f'·n_{t−1} + i'·k_t
+    h_t = (C_t q_t) / max(|n_tᵀ q_t|, 1) ,  out = σ(o_t) ⊙ h_t
+
+sLSTM keeps a scalar-memory cell per hidden unit with a per-head recurrent
+matrix R. Both run as sequential `lax.scan` over time for training and carry
+O(1)-per-token state for decoding, which is what makes long_500k decode
+feasible for this architecture. xlstm-350m alternates mLSTM/sLSTM blocks; the
+scanned unit here is an (mLSTM, sLSTM) pair — num_layers must be even.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class MLSTMParams(NamedTuple):
+    wq: jax.Array   # (d, H*dh)
+    wk: jax.Array
+    wv: jax.Array
+    wi: jax.Array   # (d, H) input-gate pre-activation
+    wf: jax.Array   # (d, H) forget-gate pre-activation
+    wo: jax.Array   # (d, d) output gate
+    w_out: jax.Array  # (H*dh, d)
+
+
+class SLSTMParams(NamedTuple):
+    w_in: jax.Array   # (d, 4*d) — i, f, z, o pre-activations from input
+    r_rec: jax.Array  # (H, dh, 4*dh) — per-head recurrent weights
+    w_out: jax.Array  # (d, d)
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, dh, dh)
+    n: jax.Array  # (B, H, dh)
+    m: jax.Array  # (B, H)
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, d)
+    n: jax.Array  # (B, d)
+    h: jax.Array  # (B, d)
+
+
+def mlstm_zero_state(bsz: int, heads: int, dh: int) -> MLSTMState:
+    return MLSTMState(jnp.zeros((bsz, heads, dh, dh), jnp.float32),
+                      jnp.zeros((bsz, heads, dh), jnp.float32),
+                      jnp.full((bsz, heads), -1e30, jnp.float32))
+
+
+def slstm_zero_state(bsz: int, d: int) -> SLSTMState:
+    z = jnp.zeros((bsz, d), jnp.float32)
+    return SLSTMState(z, z, z)
+
+
+def _mlstm_step(qkvif, state: MLSTMState):
+    q, k, v, i_pre, f_pre = qkvif            # (B,H,dh)×3, (B,H)×2
+    c, n, m = state
+    f_log = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    i_log = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(f_log + m, i_log)
+    i_g = jnp.exp(i_log - m_new)[..., None]                     # (B,H,1)
+    f_g = jnp.exp(f_log + m - m_new)[..., None]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    c = f_g[..., None] * c + i_g[..., None] * vf[..., :, None] * kf[..., None, :]
+    n = f_g * n + i_g * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhvk,bhk->bhv", c, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)), 1.0)
+    h = num / den[..., None]
+    return MLSTMState(c, n, m_new), h                            # h: (B,H,dh)
+
+
+def mlstm_block(p: MLSTMParams, x: jax.Array, heads: int,
+                state: MLSTMState | None = None):
+    """x: (B, S, d) → (y: (B, S, d), final state)."""
+    bsz, s, d = x.shape
+    dh = p.wq.shape[-1] // heads
+    if state is None:
+        state = mlstm_zero_state(bsz, heads, dh)
+    q = (x @ p.wq).reshape(bsz, s, heads, dh)
+    k = (x @ p.wk).reshape(bsz, s, heads, dh) * dh ** -0.5
+    v = (x @ p.wv).reshape(bsz, s, heads, dh)
+    i_pre = (x @ p.wi).reshape(bsz, s, heads)
+    f_pre = (x @ p.wf).reshape(bsz, s, heads)
+    o_gate = jax.nn.sigmoid(x @ p.wo)                            # (B, S, d)
+
+    def step(st, t):
+        st, h = _mlstm_step(t, st)
+        return st, h
+
+    xs = tuple(a.transpose(1, 0, 2, 3) if a.ndim == 4 else a.transpose(1, 0, 2)
+               for a in (q, k, v, i_pre, f_pre))
+    state, hs = jax.lax.scan(step, state, xs)
+    h = hs.transpose(1, 0, 2, 3).reshape(bsz, s, heads * dh).astype(x.dtype)
+    return (o_gate * (h @ p.w_out)), state
+
+
+def mlstm_decode_step(p: MLSTMParams, x: jax.Array, heads: int,
+                      state: MLSTMState):
+    """x: (B, 1, d) → (y: (B, 1, d), state')."""
+    y, state = mlstm_block(p, x, heads, state)
+    return y, state
+
+
+def slstm_block(p: SLSTMParams, x: jax.Array, heads: int,
+                state: SLSTMState | None = None):
+    """x: (B, S, d) → (y, final state). Gates see h_{t−1} via per-head R."""
+    bsz, s, d = x.shape
+    dh = d // heads
+    if state is None:
+        state = slstm_zero_state(bsz, d)
+    pre_in = x @ p.w_in                                           # (B, S, 4d)
+
+    def step(st, pre_t):
+        c, n, h = st.c, st.n, st.h
+        h_heads = h.reshape(bsz, heads, dh)
+        rec = jnp.einsum("bhk,hkj->bhj", h_heads,
+                         p.r_rec.astype(jnp.float32)).reshape(bsz, 4 * d)
+        pre = pre_t.astype(jnp.float32) + rec
+        i_pre, f_pre, z_pre, o_pre = jnp.split(pre, 4, axis=-1)
+        i_g = jnp.exp(jnp.minimum(i_pre, 10.0))       # exp gating, clamped
+        f_g = jax.nn.sigmoid(f_pre)
+        z = jnp.tanh(z_pre)
+        o = jax.nn.sigmoid(o_pre)
+        c = f_g * c + i_g * z
+        n = f_g * n + i_g
+        h = o * c / jnp.maximum(jnp.abs(n), 1.0)
+        return SLSTMState(c, n, h), h
+
+    state, hs = jax.lax.scan(step, state, pre_in.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype) @ p.w_out
+    return y, state
+
+
+def slstm_decode_step(p: SLSTMParams, x: jax.Array, heads: int,
+                      state: SLSTMState):
+    y, state = slstm_block(p, x, heads, state)
+    return y, state
+
+
+def init_mlstm(key, d: int, heads: int, dtype=jnp.float32) -> MLSTMParams:
+    ks = jax.random.split(key, 7)
+    sc = 0.02
+    f = lambda k, shape: (jax.random.normal(k, shape) * sc).astype(dtype)
+    return MLSTMParams(wq=f(ks[0], (d, d)), wk=f(ks[1], (d, d)),
+                       wv=f(ks[2], (d, d)), wi=f(ks[3], (d, heads)),
+                       wf=f(ks[4], (d, heads)) + 3.0, wo=f(ks[5], (d, d)),
+                       w_out=f(ks[6], (d, d)))
+
+
+def init_slstm(key, d: int, heads: int, dtype=jnp.float32) -> SLSTMParams:
+    ks = jax.random.split(key, 3)
+    sc = 0.02
+    dh = d // heads
+    f = lambda k, shape: (jax.random.normal(k, shape) * sc).astype(dtype)
+    return SLSTMParams(w_in=f(ks[0], (d, 4 * d)),
+                       r_rec=f(ks[1], (heads, dh, 4 * dh)),
+                       w_out=f(ks[2], (d, d)))

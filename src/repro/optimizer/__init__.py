@@ -1,0 +1,4 @@
+"""Pure-JAX pytree optimizers (optax is not available offline)."""
+from repro.optimizer.optim import (Optimizer, adamw, sgd, cosine_schedule,
+                                   constant_schedule, warmup_cosine,
+                                   global_norm, clip_by_global_norm)

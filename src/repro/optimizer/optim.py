@@ -1,0 +1,139 @@
+"""Pytree optimizers: AdamW, SGD(+momentum), LR schedules, grad clipping.
+
+Same (init, update) contract as optax, but self-contained:
+
+    opt = adamw(lr=schedule, weight_decay=0.1)
+    opt_state = opt.init(params)
+    updates, opt_state = opt.update(grads, opt_state, params)
+    params = apply_updates(params, updates)
+
+States are plain pytrees (dicts of arrays + a scalar step), so they thread
+through jit/shard_map/checkpointing unchanged and inherit param shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+ScalarOrSchedule = Union[float, Schedule]
+
+
+def _lr_at(lr: ScalarOrSchedule, step: jax.Array) -> jax.Array:
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+def constant_schedule(value: float) -> Schedule:
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def cosine_schedule(peak: float, total_steps: int, floor: float = 0.0) -> Schedule:
+    def fn(step):
+        frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac))
+    return fn
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.0) -> Schedule:
+    cos = cosine_schedule(peak, max(total_steps - warmup_steps, 1), floor)
+    def fn(step):
+        warm = peak * step / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Gradient clipping
+# ---------------------------------------------------------------------------
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def adamw(lr: ScalarOrSchedule, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda: jax.tree.map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return {"mu": zeros(), "nu": zeros(),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v +
+                          (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                          state["nu"], grads)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m, v, p):
+            m_hat, v_hat = m / c1, v / c2
+            u = -lr_t * (m_hat / (jnp.sqrt(v_hat) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+            return u.astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, {"mu": mu, "nu": nu, "step": step}
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: ScalarOrSchedule, momentum: float = 0.0,
+        nesterov: bool = False) -> Optimizer:
+    def init(params):
+        state = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["vel"] = jax.tree.map(
+                lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return state
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        if not momentum:
+            updates = jax.tree.map(
+                lambda g, p: (-lr_t * g.astype(jnp.float32)).astype(p.dtype),
+                grads, params)
+            return updates, {"step": step}
+        vel = jax.tree.map(
+            lambda v, g: momentum * v + g.astype(jnp.float32),
+            state["vel"], grads)
+        if nesterov:
+            updates = jax.tree.map(
+                lambda v, g, p: (-lr_t * (momentum * v + g.astype(jnp.float32))
+                                 ).astype(p.dtype), vel, grads, params)
+        else:
+            updates = jax.tree.map(
+                lambda v, p: (-lr_t * v).astype(p.dtype), vel, params)
+        return updates, {"step": step, "vel": vel}
+
+    return Optimizer(init, update)

@@ -1,0 +1,2 @@
+"""Serving runtime: continuous-batching request scheduler."""
+from repro.serve.scheduler import BatchScheduler, Request

@@ -1,0 +1,131 @@
+"""Continuous-batching scheduler: slot-level request lifecycle over decode.
+
+The production decode step (repro/dist/step.make_serve_step) runs a fixed
+batch of B slots through one token per call. This scheduler keeps those
+slots saturated against a request queue:
+
+  * submit(Request)        — enqueue a prompt with a max_new_tokens budget,
+  * step()                 — (1) refill any free slot: prefill the next
+                             queued prompt in isolation (batch-1) and
+                             scatter its caches / position into the slot;
+                             (2) run ONE batched decode_step; (3) harvest
+                             tokens per active slot, retiring slots that hit
+                             their budget or emit `eos_id`,
+  * run_to_completion()    — steps until queue and slots drain.
+
+Per-slot positions (DecodeState.pos: (B,)) are what make mid-flight refill
+sound: each slot's RoPE phase, ring-cache slot and validity mask depend only
+on its own counter. Works with every decode-capable block family, including
+the recurrent states (their per-slot rows are scattered the same way) and
+the NDSC-quantized cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode as decode_lib
+from repro.models import model as model_lib
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: jax.Array            # (S,) int32
+    max_new_tokens: int = 32
+    tokens_out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def _scatter_slot(batched, single, slot: int):
+    """Write the batch-1 pytree `single` into slot `slot` of `batched`.
+
+    Cache leaves are (L, B, ...); pos is (B,). Leaves that don't carry a
+    batch axis in that position (e.g. the per-layer rotation signs, which
+    are identical across slots) are left as-is.
+    """
+
+    def put(b, s):
+        if b.ndim >= 2 and s.ndim == b.ndim and s.shape[1] == 1 \
+                and b.shape[0] == s.shape[0] and b.shape[2:] == s.shape[2:]:
+            return b.at[:, slot].set(s[:, 0])        # (L, B, …) cache leaf
+        if b.ndim >= 1 and s.ndim == b.ndim and s.shape[0] == 1 \
+                and b.shape[1:] == s.shape[1:]:
+            return b.at[slot].set(s[0])              # (B, …) leaf (pos)
+        return b                                      # shared leaf (signs)
+
+    caches = jax.tree.map(put, batched.caches, single.caches)
+    pos = batched.pos.at[slot].set(single.pos[0])
+    return decode_lib.DecodeState(caches=caches, pos=pos)
+
+
+class BatchScheduler:
+    def __init__(self, cfg, params, *, slots: int, max_seq: int,
+                 eos_id: Optional[int] = None, greedy: bool = True):
+        if not cfg.decode_supported:
+            raise ValueError(f"{cfg.name} is encoder-only")
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.state = decode_lib.init_decode_state(cfg, slots, max_seq)
+        self.active: list[Optional[Request]] = [None] * slots
+        self.last_token = jnp.zeros((slots, 1), jnp.int32)
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._step = jax.jit(
+            lambda p, st, t: decode_lib.decode_step(cfg, p, st, t))
+        self._prefill = jax.jit(
+            lambda p, t: decode_lib.prefill(cfg, p, t, max_seq))
+
+    # -- client API ----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def idle(self) -> bool:
+        return not self.queue and all(r is None for r in self.active)
+
+    def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
+        steps = 0
+        while not self.idle() and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished
+
+    # -- engine --------------------------------------------------------------
+    def step(self) -> None:
+        self._refill()
+        if all(r is None for r in self.active):
+            return
+        logits, self.state = self._step(self.params, self.state,
+                                        self.last_token)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.last_token = next_tok[:, None]
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(next_tok[slot])
+            req.tokens_out.append(tok)
+            hit_eos = self.eos_id is not None and tok == self.eos_id
+            if hit_eos or len(req.tokens_out) >= req.max_new_tokens \
+                    or int(self.state.pos[slot]) >= self.max_seq - 1:
+                req.done = True
+                self.finished.append(req)
+                self.active[slot] = None
+
+    def _refill(self) -> None:
+        for slot in range(self.slots):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            logits1, state1 = self._prefill(self.params,
+                                            req.prompt[None, :])
+            self.state = _scatter_slot(self.state, state1, slot)
+            first = int(jnp.argmax(logits1[0]))
+            req.tokens_out.append(first)
+            self.last_token = self.last_token.at[slot, 0].set(first)
+            self.active[slot] = req

@@ -1,0 +1,107 @@
+"""DSC/NDSC codecs: Theorem 1 error bounds as property tests (hypothesis)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coding import Codec, CodecConfig, compress_in_embedded_space
+from repro.core.embeddings import EmbeddingSpec
+from repro.core import frames as F
+from repro.core import quantizers as q
+
+
+def _codec(kind, n, N, R, dithered=False, embedding="near_democratic"):
+    frame = F.make_frame(kind, jax.random.key(0), n, N)
+    return Codec(frame, CodecConfig(bits_per_dim=R, dithered=dithered,
+                                    embedding=EmbeddingSpec(kind=embedding)))
+
+
+@given(R=st.sampled_from([1.0, 2.0, 4.0, 8.0]),
+       kind=st.sampled_from(["haar", "hadamard"]),
+       seed=st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_ndsc_thm1_bound(R, kind, seed):
+    """‖y − Q_nd(y)‖₂ ≤ 2^(2−R/λ)·√log(2N)·‖y‖₂ (Thm. 1 Eq. (14))."""
+    n = N = 128
+    codec = _codec(kind, n, N, R)
+    y = jax.random.normal(jax.random.key(seed), (n,)) ** 3
+    y_hat = codec.roundtrip(y, jax.random.key(seed + 1))
+    rel = float(jnp.linalg.norm(y_hat - y) / jnp.linalg.norm(y))
+    assert rel <= codec.error_bound() + 1e-6
+
+
+def test_dsc_thm1_bound_democratic():
+    """DSC with Haar frame: ‖y − Q_d(y)‖₂ ≤ 2^(1−R/λ)·K_u·‖y‖₂ (Eq. (13))."""
+    n, N, R = 64, 128, 4.0
+    codec = _codec("haar", n, N, R, embedding="democratic")
+    for seed in range(5):
+        y = jax.random.normal(jax.random.key(seed), (n,)) ** 3
+        y_hat = codec.roundtrip(y, jax.random.key(100 + seed))
+        rel = float(jnp.linalg.norm(y_hat - y) / jnp.linalg.norm(y))
+        assert rel <= codec.error_bound() + 1e-6
+
+
+def test_error_decays_with_budget():
+    """More bits → strictly better error (covering-efficiency sanity)."""
+    n = N = 256
+    y = jax.random.normal(jax.random.key(7), (n,)) ** 3
+    errs = []
+    for R in (1, 2, 4, 8):
+        codec = _codec("hadamard", n, N, float(R))
+        y_hat = codec.roundtrip(y, jax.random.key(8))
+        errs.append(float(jnp.linalg.norm(y_hat - y)))
+    assert errs == sorted(errs, reverse=True)
+    assert errs[-1] < 0.02 * errs[0] + 1e-9
+
+
+def test_sublinear_budget_runs():
+    """R < 1: subsample + 1-bit path (App. E.2); unbiased when dithered."""
+    n = N = 512
+    codec = _codec("hadamard", n, N, R=0.5, dithered=True)
+    assert codec.sublinear
+    y = jax.random.normal(jax.random.key(1), (n,))
+    keys = jax.random.split(jax.random.key(2), 600)
+    outs = jax.vmap(lambda k: codec.roundtrip(y, k))(keys)
+    mean = jnp.mean(outs, axis=0)
+    # unbiasedness of the sub-linear dithered codec (consensus relies on it)
+    corr = float(jnp.dot(mean, y) / (jnp.linalg.norm(mean) * jnp.linalg.norm(y)))
+    assert corr > 0.9
+
+
+def test_wire_bits_budget():
+    """Fixed-length budget audit: nR bits (+O(1) scale, excluded here)."""
+    codec = _codec("hadamard", 128, 128, R=4.0)
+    assert codec.wire_bits() == 128 * 4
+    codec = _codec("hadamard", 100, 128, R=4.0)   # λ = 1.28
+    assert codec.wire_bits() <= 100 * 4 + 1e-9    # nR budget respected
+
+
+def test_dithered_codec_unbiased():
+    n = N = 128
+    codec = _codec("hadamard", n, N, R=2.0, dithered=True)
+    y = jax.random.normal(jax.random.key(3), (n,))
+    keys = jax.random.split(jax.random.key(4), 800)
+    outs = jax.vmap(lambda k: codec.roundtrip(y, k))(keys)
+    err = float(jnp.linalg.norm(jnp.mean(outs, axis=0) - y)
+                / jnp.linalg.norm(y))
+    assert err < 0.1
+
+
+def test_thm4_compress_in_embedded_space():
+    """App. H: rand-k in the embedded space ≤ γ‖y‖₂ uniformly (Thm. 4)."""
+    n = N = 256
+    frame = F.make_frame("hadamard", jax.random.key(0), n, N)
+    y = jax.random.normal(jax.random.key(1), (n,)) ** 3
+
+    def randk_half(key, x):
+        mask = q.subsample_mask(key, x.shape, 0.5)
+        return x * mask  # biased variant: uniform bound applies
+
+    y_hat = compress_in_embedded_space(frame, randk_half, y,
+                                       jax.random.key(2))
+    gamma = 2 * math.sqrt(math.log(2 * N))
+    rel = float(jnp.linalg.norm(y_hat - y) / jnp.linalg.norm(y))
+    assert rel <= gamma

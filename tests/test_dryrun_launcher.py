@@ -1,0 +1,52 @@
+"""The multi-pod dry-run launcher, exercised end-to-end in a subprocess
+(it must own the 512-device XLA flag before jax init)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.mark.slow
+def test_dryrun_single_combo(tmp_path):
+    out_json = tmp_path / "rec.json"
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = SRC
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "xlstm-350m", "--shape", "decode_32k", "--multi-pod",
+         "--json-out", str(out_json)],
+        env=env, capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    recs = json.loads(out_json.read_text())
+    assert len(recs) == 1
+    rec = recs[0]
+    assert rec["status"] == "OK"
+    assert rec["mesh"] == "2x16x16"
+    assert rec["num_devices"] == 512
+    roof = rec["roofline"]
+    assert roof["flops_per_device"] > 0
+    assert roof["hbm_bytes_per_device"] > 0
+    assert roof["dominant"] in ("compute", "memory", "collective")
+
+
+@pytest.mark.slow
+def test_dryrun_documented_skip(tmp_path):
+    out_json = tmp_path / "rec.json"
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = SRC
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "phi3-mini-3.8b", "--shape", "long_500k",
+         "--json-out", str(out_json)],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    rec = json.loads(out_json.read_text())[0]
+    assert rec["status"] == "SKIP"
+    assert "full attention" in rec["reason"]

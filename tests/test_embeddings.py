@@ -1,0 +1,74 @@
+"""Democratic & near-democratic embeddings: Lemmas 1–3 of the paper."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import embeddings as E
+from repro.core import frames as F
+
+
+def _heavy_tailed(key, n):
+    return jax.random.normal(key, (n,)) ** 3          # paper §5 protocol
+
+
+@pytest.mark.parametrize("kind,n,N", [
+    ("haar", 64, 64), ("haar", 64, 96), ("hadamard", 64, 64),
+    ("hadamard", 100, 128),
+])
+def test_nde_exact_representation(kind, n, N):
+    """y = S x_nd exactly (Parseval closed form, Eq. (8))."""
+    f = F.make_frame(kind, jax.random.key(0), n, N)
+    y = _heavy_tailed(jax.random.key(1), n)
+    x = E.near_democratic(f, y)
+    np.testing.assert_allclose(E.inverse(f, x), y, atol=1e-4)
+
+
+@pytest.mark.parametrize("kind", ["haar", "hadamard"])
+def test_nde_linf_bound(kind):
+    """Lemmas 2/3: ‖x_nd‖∞ ≤ 2√(λ log(2N)/N)·‖y‖₂ w.p. ≥ 1 − 1/2N."""
+    n = N = 256
+    failures = 0
+    trials = 40
+    for t in range(trials):
+        f = F.make_frame(kind, jax.random.key(t), n, N)
+        y = _heavy_tailed(jax.random.key(1000 + t), n)
+        x = E.near_democratic(f, y)
+        bound = 2 * math.sqrt(math.log(2 * N) / N) * float(jnp.linalg.norm(y))
+        if float(jnp.max(jnp.abs(x))) > bound:
+            failures += 1
+    assert failures <= 2, f"ℓ∞ bound violated in {failures}/{trials} trials"
+
+
+def test_democratic_exact_and_flat():
+    """LV iterative truncation: y = Sx and ‖x‖∞ ≤ K_u‖y‖₂/√N (Lemma 1)."""
+    n, N = 64, 128
+    f = F.haar_frame(jax.random.key(0), n, N)
+    y = _heavy_tailed(jax.random.key(1), n)
+    x = E.democratic(f, y)
+    np.testing.assert_allclose(E.inverse(f, x), y, atol=1e-4)
+    ku = E.kashin_constant_upper()
+    bound = ku / math.sqrt(N) * float(jnp.linalg.norm(y))
+    assert float(jnp.max(jnp.abs(x))) <= bound * 1.05
+
+
+def test_democratic_flatter_than_nde():
+    """DE should have ≤ ℓ∞ than NDE (it minimizes ℓ∞; NDE minimizes ℓ2)."""
+    n, N = 64, 128
+    f = F.haar_frame(jax.random.key(0), n, N)
+    y = _heavy_tailed(jax.random.key(1), n)
+    x_d = E.democratic(f, y)
+    x_nd = E.near_democratic(f, y)
+    assert float(jnp.max(jnp.abs(x_d))) <= float(jnp.max(jnp.abs(x_nd))) + 1e-5
+
+
+def test_embedding_spec_dispatch():
+    f = F.haar_frame(jax.random.key(0), 16, 32)
+    y = jax.random.normal(jax.random.key(1), (16,))
+    for kind in ("near_democratic", "democratic"):
+        x = E.EmbeddingSpec(kind=kind).embed(f, y)
+        np.testing.assert_allclose(E.inverse(f, x), y, atol=1e-4)
+    with pytest.raises(ValueError):
+        E.EmbeddingSpec(kind="nope").embed(f, y)

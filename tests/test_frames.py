@@ -1,0 +1,49 @@
+"""Frame constructions: Parseval property, adjoint consistency (paper §2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import frames as F
+
+
+@pytest.mark.parametrize("kind,n,N", [
+    ("haar", 16, 16), ("haar", 16, 32), ("haar", 24, 37),
+    ("hadamard", 16, 16), ("hadamard", 16, 32), ("hadamard", 24, 32),
+])
+def test_parseval(kind, n, N):
+    """S Sᵀ = I_n for Haar and PDH frames (paper: Parseval ⇒ K_l = 1)."""
+    f = F.make_frame(kind, jax.random.key(0), n, N)
+    S = F.dense_matrix(f)
+    np.testing.assert_allclose(S @ S.T, np.eye(n), atol=1e-5)
+
+
+def test_subgaussian_approx_parseval():
+    f = F.subgaussian_frame(jax.random.key(1), 64, 256)
+    S = F.dense_matrix(f)
+    gram = S @ S.T
+    # approximate frame bounds A=1−ξ, B=1+ξ (paper App. J.1)
+    eigs = np.linalg.eigvalsh(gram)
+    # Marchenko–Pastur: eigenvalues of S Sᵀ concentrate in
+    # [(1−√(n/N))², (1+√(n/N))²] = [0.25, 2.25] for λ = 4
+    assert 0.15 < eigs.min() < eigs.max() < 2.4
+
+
+@pytest.mark.parametrize("kind", ["haar", "hadamard"])
+def test_apply_matches_dense(kind):
+    f = F.make_frame(kind, jax.random.key(2), 24, 32)
+    S = F.dense_matrix(f)
+    y = jax.random.normal(jax.random.key(3), (5, 24))
+    x = jax.random.normal(jax.random.key(4), (5, 32))
+    np.testing.assert_allclose(f.apply(x), x @ np.asarray(S).T, atol=1e-5)
+    np.testing.assert_allclose(f.apply_t(y), y @ np.asarray(S), atol=1e-5)
+
+
+def test_hadamard_requires_pow2():
+    with pytest.raises(ValueError):
+        F.hadamard_frame(jax.random.key(0), 10, 24)
+
+
+def test_next_pow2():
+    assert [F.next_pow2(k) for k in (1, 2, 3, 9, 1024, 1025)] == \
+        [1, 2, 4, 16, 1024, 2048]

@@ -1,0 +1,138 @@
+"""Distributed gradient compression: codec, EF, wire audit, strategies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.dist import gradcomp as G
+
+
+def _tree(key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w": jax.random.normal(k1, (37, 19)),
+            "b": jax.random.normal(k2, (64,)),
+            "nested": {"v": jax.random.normal(k3, (3, 5, 7))}}
+
+
+@given(bits=st.sampled_from([2, 4, 8]), seed=st.integers(0, 200))
+@settings(max_examples=15, deadline=None)
+def test_tree_roundtrip_error(bits, seed):
+    cfg = G.GradCompConfig(bits=bits, chunk=128)
+    tree = _tree(jax.random.key(seed))
+    payloads, meta = G.compress_tree(tree, cfg)
+    out = G.decode_payload(payloads, meta, cfg)
+    for k in jax.tree.leaves(tree):
+        pass
+    flat_in, flat_out = jax.tree.leaves(tree), jax.tree.leaves(out)
+    for a, b in zip(flat_in, flat_out):
+        assert a.shape == b.shape
+        rel = float(jnp.linalg.norm(b - a) / (jnp.linalg.norm(a) + 1e-9))
+        # chunked NDSC bound with padding slack
+        assert rel <= 2.0 ** (2 - bits) * np.sqrt(np.log(2 * 128)) + 1e-6
+
+
+def test_deterministic_frames():
+    """Same seed + leaf index → identical payloads (shared randomness)."""
+    cfg = G.GradCompConfig(bits=4, chunk=64)
+    x = jax.random.normal(jax.random.key(0), (100,))
+    p1 = G.encode_leaf(x, 3, cfg)
+    p2 = G.encode_leaf(x, 3, cfg)
+    np.testing.assert_array_equal(p1["words"], p2["words"])
+    p3 = G.encode_leaf(x, 4, cfg)          # different leaf → different frame
+    assert not np.array_equal(np.asarray(p1["words"]),
+                              np.asarray(p3["words"]))
+
+
+def test_wire_bytes_audit():
+    cfg = G.GradCompConfig(bits=4, chunk=64)
+    tree = {"w": jnp.zeros((64, 64))}
+    audit = G.wire_bytes_tree(tree, cfg, num_workers=8)
+    assert audit["f32_bytes"] == 64 * 64 * 4
+    assert audit["payload_bytes"] == 64 * 64 * 4 // 8 + 64 * 4
+    assert audit["compression_x"] == pytest.approx(
+        audit["f32_bytes"] / audit["payload_bytes"])
+
+
+def test_stacked_decode():
+    """extra_lead=1: decode m gathered payloads at once (consensus path)."""
+    cfg = G.GradCompConfig(bits=8, chunk=64)
+    xs = [jax.random.normal(jax.random.key(i), (50,)) for i in range(4)]
+    payloads = [G.encode_leaf(x, 0, cfg) for x in xs]
+    stacked = {"words": jnp.stack([p["words"] for p in payloads]),
+               "scale": jnp.stack([p["scale"] for p in payloads])}
+    tree = {"x": xs[0]}
+    _, treedef = jax.tree.flatten(tree)
+    meta = (treedef, [(50, (50,), jnp.float32)])
+    out = G.decode_payload(jax.tree.unflatten(treedef, [stacked]), meta, cfg,
+                           extra_lead=1)
+    for i, x in enumerate(xs):
+        rel = float(jnp.linalg.norm(out["x"][i] - x) / jnp.linalg.norm(x))
+        assert rel < 0.05
+
+
+def test_error_feedback_contracts():
+    """EF: repeated compression of a FIXED gradient with error feedback makes
+    the running descent direction mean → exact gradient (EF-SGD property)."""
+    cfg = G.GradCompConfig(bits=2, chunk=64)
+    g = jax.random.normal(jax.random.key(0), (200,)) ** 3
+    e = jnp.zeros_like(g)
+    decoded_sum = jnp.zeros_like(g)
+    for t in range(30):
+        u = g + e
+        p = G.encode_leaf(u, 0, cfg)
+        d = G.decode_leaf(p, 0, u.size, u.shape, u.dtype, cfg)
+        e = u - d
+        decoded_sum = decoded_sum + d
+    mean_dir = decoded_sum / 30
+    rel = float(jnp.linalg.norm(mean_dir - g) / jnp.linalg.norm(g))
+    assert rel < 0.05          # without EF, 2-bit error plateaus ≈ β ≈ 0.9
+
+
+def test_dithered_codec_unbiased_over_rounds():
+    """§Perf it.10: non-subtractive uniform dither makes the chunked codec
+    unbiased (in the quantizer interior) — the Alg.-2 property that lets
+    training drop the params-sized EF state."""
+    cfg = G.GradCompConfig(bits=4, chunk=128, dithered=True,
+                           error_feedback=False)
+    x = jax.random.normal(jax.random.key(0), (300,)) ** 3
+    outs = [G.decode_leaf(G.encode_leaf(x, 0, cfg, round_idx=r), 0,
+                          x.size, x.shape, x.dtype, cfg)
+            for r in range(300)]
+    mean = jnp.mean(jnp.stack(outs), 0)
+    rel = float(jnp.linalg.norm(mean - x) / jnp.linalg.norm(x))
+    det = G.GradCompConfig(bits=4, chunk=128)
+    d = G.decode_leaf(G.encode_leaf(x, 0, det), 0, x.size, x.shape,
+                      x.dtype, det)
+    rel_det = float(jnp.linalg.norm(d - x) / jnp.linalg.norm(x))
+    assert rel < rel_det / 3          # bias ≪ single-shot NN error
+
+
+def test_dithered_training_without_ef(mesh=None):
+    """Dithered codec + NO error feedback still fits a fixed batch."""
+    from repro import configs
+    from repro.data import batch_for_shape
+    from repro.dist import step as step_lib
+    from repro.launch.mesh import make_host_mesh
+    from repro.optimizer import adamw
+    mesh = make_host_mesh(1, 1)
+    cfg = configs.get_reduced("llama3.2-3b")
+    gc = G.GradCompConfig(bits=4, chunk=256, dithered=True,
+                          error_feedback=False)
+    opt = adamw(3e-3)
+    tstep = step_lib.make_train_step(cfg, opt, gc, mesh, clip_norm=1.0)
+    params, opt_state, ef = step_lib.init_train_state(cfg, opt, gc, mesh)
+    assert ef == {}                    # no EF state allocated
+    batch = batch_for_shape(cfg, 8, 32, 0)
+    losses = []
+    for _ in range(20):
+        params, opt_state, ef, metrics = tstep(params, opt_state, ef, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 2.0
+
+
+def test_strategy_validation():
+    with pytest.raises(ValueError):
+        G.GradCompConfig(bits=3)
+    with pytest.raises(ValueError):
+        G.GradCompConfig(chunk=100)

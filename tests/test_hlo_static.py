@@ -1,0 +1,97 @@
+"""Trip-count-aware HLO static analyzer: validated against unrolled loops."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_static
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_flops_equal_unroll():
+    w = jnp.ones((128, 128))
+    x = jnp.ones((8, 128))
+    trips = 12
+
+    def body(c, _):
+        return jnp.tanh(c @ w), None
+
+    def scanned(x):
+        return jax.lax.scan(body, x, None, length=trips)[0]
+
+    def unrolled(x):
+        for _ in range(trips):
+            x, _ = body(x, None)
+        return x
+
+    f_scan = hlo_static.analyze(_compile_text(scanned, x)).flops
+    f_unroll = hlo_static.analyze(_compile_text(unrolled, x)).flops
+    assert f_scan == pytest.approx(f_unroll, rel=0.02)
+    # and both ≈ trips × 2·8·128·128 matmul flops
+    assert f_scan == pytest.approx(trips * 2 * 8 * 128 * 128, rel=0.05)
+
+
+def test_nested_scan_multiplies():
+    w = jnp.ones((32, 32))
+    x = jnp.ones((4, 32))
+
+    def inner(c, _):
+        return c @ w, None
+
+    def outer(c, _):
+        return jax.lax.scan(inner, c, None, length=5)[0], None
+
+    def fn(x):
+        return jax.lax.scan(outer, x, None, length=7)[0]
+
+    flops = hlo_static.analyze(_compile_text(fn, x)).flops
+    assert flops == pytest.approx(7 * 5 * 2 * 4 * 32 * 32, rel=0.05)
+
+
+def test_scan_bytes_not_inflated_by_stacked_xs():
+    """Scan xs of shape (T, …) must be charged one pass, not T passes."""
+    t, d = 64, 256
+    xs = jnp.ones((t, d))
+
+    def body(c, x):
+        return c + x, None
+
+    def fn(xs):
+        return jax.lax.scan(body, jnp.zeros((d,)), xs)[0]
+
+    b = hlo_static.analyze(_compile_text(fn, xs)).bytes_accessed
+    full = t * d * 4
+    assert b < 8 * full          # one-pass-ish, NOT t× = 64×
+
+
+def test_collective_census_with_multiplier():
+    if len(jax.devices()) < 1:
+        pytest.skip("needs a device")
+    import numpy as np
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                             ("data", "model"))
+    from jax.sharding import PartitionSpec as P
+
+    def local(x):
+        def body(c, _):
+            return jax.lax.psum(c, "data"), None
+        return jax.lax.scan(body, x, None, length=3)[0]
+
+    sm = jax.shard_map(local, mesh=mesh, in_specs=P("data"), out_specs=P("data"),
+                       axis_names={"data"}, check_vma=False)
+    txt = jax.jit(sm).lower(jnp.ones((4, 8))).compile().as_text()
+    costs = hlo_static.analyze(txt)
+    # 1-device meshes lower psum to no-op; just assert the parse runs
+    assert costs.flops >= 0
+
+
+def test_shape_parsing():
+    elems, bts = hlo_static._shape_elems_bytes("f32[8,16]{1,0}")
+    assert (elems, bts) == (128, 512)
+    elems, bts = hlo_static._shape_elems_bytes(
+        "(s32[], f32[4,4]{1,0}, /*index=2*/bf16[10])")
+    assert elems == 1 + 16 + 10
+    assert bts == 4 + 64 + 20

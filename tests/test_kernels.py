@@ -1,0 +1,103 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import fwht as fwht_kernel
+from repro.kernels import quantpack as qp_kernel
+from repro.kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# FWHT
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [2, 8, 64, 128, 1024])
+@pytest.mark.parametrize("lead", [(), (1,), (5,), (3, 4)])
+def test_fwht_pallas_matches_ref(n, lead):
+    x = jax.random.normal(jax.random.key(0), lead + (n,))
+    got = fwht_kernel.fwht_pallas(x, interpret=True)
+    np.testing.assert_allclose(got, ref.fwht(x), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fwht_dtypes(dtype):
+    x = jax.random.normal(jax.random.key(1), (4, 256)).astype(dtype)
+    got = fwht_kernel.fwht_pallas(x, interpret=True)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref.fwht(x), np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_fwht_orthonormal_involution():
+    """H·H = I (normalized Hadamard is its own inverse)."""
+    x = jax.random.normal(jax.random.key(2), (3, 512))
+    np.testing.assert_allclose(ref.fwht(ref.fwht(x)), x, atol=1e-4)
+    np.testing.assert_allclose(
+        fwht_kernel.fwht_pallas(fwht_kernel.fwht_pallas(x, interpret=True),
+                                interpret=True), x, atol=1e-4)
+
+
+def test_fwht_matches_hadamard_matrix():
+    n = 16
+    h = np.array([[1.0]])
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    h /= np.sqrt(n)
+    x = np.random.RandomState(0).randn(4, n).astype(np.float32)
+    np.testing.assert_allclose(ref.fwht(jnp.asarray(x)), x @ h, atol=1e-5)
+
+
+def test_fwht_rejects_non_pow2():
+    with pytest.raises(ValueError):
+        fwht_kernel.fwht_pallas(jnp.zeros((2, 48)), interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# quantize-pack / unpack-dequant
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bits", [1, 2, 4, 8])
+@pytest.mark.parametrize("rows,n", [(1, 32), (7, 128), (16, 1024)])
+def test_quantpack_pallas_matches_ref(bits, rows, n):
+    x = jax.random.normal(jax.random.key(3), (rows, n))
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    got = qp_kernel.quantize_pack_pallas(x, scale, bits, interpret=True)
+    want = ref.quantize_pack(x, scale, bits)
+    np.testing.assert_array_equal(got, want)
+    back = qp_kernel.unpack_dequant_pallas(got, scale, bits, n,
+                                           interpret=True)
+    np.testing.assert_allclose(back, ref.unpack_dequant(want, scale, bits, n),
+                               atol=1e-6)
+
+
+@given(bits=st.sampled_from([1, 2, 4, 8]), seed=st.integers(0, 500))
+@settings(max_examples=20, deadline=None)
+def test_quantpack_roundtrip_error_property(bits, seed):
+    """|x − unpack(pack(x))| ≤ scale/2^bits per coordinate."""
+    n = 128
+    x = jax.random.normal(jax.random.key(seed), (4, n))
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    words = ref.quantize_pack(x, scale, bits)
+    back = ref.unpack_dequant(words, scale, bits, n)
+    max_err = float(jnp.max(jnp.abs(back - x) / scale))
+    assert max_err <= 1.0 / (2 ** bits) + 1e-6
+
+
+def test_quantpack_rejects_bad_bits():
+    x = jnp.zeros((2, 32))
+    s = jnp.ones((2, 1))
+    with pytest.raises(ValueError):
+        ref.quantize_pack(x, s, 3)
+    with pytest.raises(ValueError):
+        qp_kernel.quantize_pack_pallas(x, s, 5, interpret=True)
+
+
+def test_packed_size():
+    """Wire-format audit: 4-bit pack is exactly 8 values per int32 word."""
+    x = jnp.ones((2, 64))
+    s = jnp.ones((2, 1))
+    assert ref.quantize_pack(x, s, 4).shape == (2, 8)
+    assert ref.quantize_pack(x, s, 1).shape == (2, 2)
+    assert ref.quantize_pack(x, s, 8).shape == (2, 16)

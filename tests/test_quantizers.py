@@ -1,0 +1,63 @@
+"""Scalar quantizers (paper §3 Eq. (11), App. E Eq. (20))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantizers as q
+
+
+@given(st.integers(min_value=1, max_value=8), st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_uniform_quantizer_max_error(bits, seed):
+    """Per-coordinate error ≤ Δ/2 = 1/levels on B∞(1) (Eq. (11))."""
+    levels = 2 ** bits
+    x = jax.random.uniform(jax.random.key(seed), (64,), minval=-1, maxval=1)
+    err = jnp.abs(q.uniform_quantize(x, levels) - x)
+    assert float(jnp.max(err)) <= 1.0 / levels + 1e-6
+
+
+def test_quantize_dequantize_indices_roundtrip():
+    x = jnp.linspace(-1, 1, 101)
+    for levels in (2, 3, 4, 16, 256):
+        idx = q.quantize_indices(x, levels)
+        assert int(idx.min()) >= 0 and int(idx.max()) <= levels - 1
+        np.testing.assert_allclose(q.dequantize_indices(idx, levels),
+                                   q.uniform_quantize(x, levels), atol=1e-6)
+
+
+def test_dithered_quantizer_unbiased():
+    """E[Q(v)] = v (App. E: unbiasedness is what removes error feedback)."""
+    v = jnp.array([0.3, -0.7, 0.123, 0.99])
+    keys = jax.random.split(jax.random.key(0), 4000)
+    samples = jax.vmap(lambda k: q.dithered_quantize(k, v, levels=5))(keys)
+    np.testing.assert_allclose(jnp.mean(samples, axis=0), v, atol=0.02)
+
+
+def test_dithered_indices_consistent():
+    key = jax.random.key(3)
+    x = jax.random.uniform(key, (256,), minval=-1, maxval=1)
+    idx = q.dithered_quantize_indices(key, x, 7)
+    vals = q.dithered_dequantize_indices(idx, 7)
+    np.testing.assert_allclose(vals, q.dithered_quantize(key, x, 7), atol=1e-6)
+
+
+def test_gain_quantizer_unbiased_in_range():
+    v = jnp.array([0.0, 1.7, 3.2])
+    keys = jax.random.split(jax.random.key(1), 3000)
+    samples = jax.vmap(lambda k: q.gain_quantize(k, v, dynamic_range=4.0,
+                                                 bits=3))(keys)
+    np.testing.assert_allclose(jnp.mean(samples, axis=0), v, atol=0.05)
+
+
+def test_subsample_mask_rate():
+    mask = q.subsample_mask(jax.random.key(0), (100_000,), 0.3)
+    assert abs(float(jnp.mean(mask)) - 0.3) < 0.01
+
+
+def test_levels_for_budget():
+    assert q.levels_for_budget(1) == 2
+    assert q.levels_for_budget(4) == 16
+    assert q.levels_for_budget(0.5) == 2      # sub-linear floor
+    assert q.levels_for_budget(2.5) == 5
