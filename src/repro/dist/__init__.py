@@ -1,0 +1,13 @@
+"""Distributed compressed-consensus subsystem.
+
+  sharding — PartitionSpec rules for params / batches on the mesh
+  gradcomp — chunked NDSC gradient codec + wire audit (the paper's E/D pair)
+  step     — train / serve / ZeRO-1 step factories (shard_map over data axes)
+  zero     — ZeRO-1 owned layout + compressed all-to-all reduce-scatter
+"""
+from repro.dist import gradcomp, sharding, step, zero
+from repro.dist.gradcomp import (GradCompConfig, compress_tree,
+                                 decode_payload, encode_leaf, decode_leaf,
+                                 wire_bytes_tree)
+from repro.dist.sharding import (batch_specs, data_axes_for, param_spec,
+                                 param_specs, shardable)

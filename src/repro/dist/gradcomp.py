@@ -1,0 +1,234 @@
+"""Chunked NDSC gradient codec for the distributed consensus (paper §3 at
+model scale).
+
+Each parameter leaf is flattened, zero-padded to a multiple of `chunk`
+(a power of two) and embedded chunk-wise with a randomized Hadamard frame
+S = D·H from `core.frames` — the near-democratic embedding that flattens
+the per-chunk dynamic range so a single ‖x‖∞ scale + uniform R-bit
+quantization achieves the Thm. 1 error 2^(2−R)·√log(2·chunk) per chunk.
+The quantized codes are bit-packed into int32 words by the fused Pallas
+kernel (`kernels.quantpack` via `kernels.ops`), which is also the exact
+wire format audited by `wire_bytes_tree`.
+
+Shared randomness: the frame for leaf i is a pure function of
+(cfg.seed, i) — every worker builds the same frame, so gathered payloads
+decode identically everywhere (and the ZeRO-1 all-to-all path in
+`repro.dist.zero` stays bit-exact with the all-gather consensus). The
+stochastic parts (non-subtractive dither, sub-linear chunk keep-mask) fold
+in `round_idx` so they refresh every step but still agree across workers.
+
+Wire format per leaf (the payload dict):
+  words  int32 (C, chunk·bits/32) — bit-packed codes
+  scale  f32   (C, 1)             — per-chunk ‖x‖∞ (the paper's O(1) bits)
+  mask   f32   (C, 1)             — only when keep_fraction < 1: which
+                                    chunks made it onto the wire this round
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import frames as frames_lib
+from repro.kernels import ops as kernel_ops
+
+STRATEGIES = ("psum", "psum_decoded", "allgather_packed", "alltoall_zero1")
+
+
+@dataclasses.dataclass(frozen=True)
+class GradCompConfig:
+    """Budget + consensus strategy for compressed gradient exchange.
+
+    bits           R per kept coordinate; {1, 2, 4, 8} (int32 packing).
+    chunk          FWHT/frame length; power of two ≥ 32.
+    strategy       psum            — exact f32 all-reduce (no compression),
+                   psum_decoded    — compress→decode locally, f32 all-reduce
+                                     (isolates codec error from wire savings),
+                   allgather_packed— all-gather the PACKED payloads, decode
+                                     all m, mean (paper's consensus, Alg. 3),
+                   alltoall_zero1  — ZeRO-1: compressed reduce-scatter via
+                                     all-to-all, owner-sharded optimizer.
+    error_feedback per-worker EF state e ← u − D(E(u)) (DGD-DEF path).
+    dithered       non-subtractive uniform dither → unbiased codec (Alg. 2 /
+                   DQ-PSGD path; lets training drop the params-sized EF).
+    keep_fraction  chunk-level subsampling for the sub-linear regime
+                   (R_eff = bits·keep_fraction < 1, App. E.2).
+    """
+
+    bits: int = 4
+    chunk: int = 256
+    strategy: str = "allgather_packed"
+    error_feedback: bool = True
+    dithered: bool = False
+    keep_fraction: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.bits not in (1, 2, 4, 8):
+            raise ValueError(f"bits must be in {{1,2,4,8}}, got {self.bits}")
+        if self.chunk < 32 or (self.chunk & (self.chunk - 1)):
+            raise ValueError(
+                f"chunk must be a power of two ≥ 32, got {self.chunk}")
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"strategy must be one of {STRATEGIES}, "
+                             f"got {self.strategy!r}")
+        if not 0.0 < self.keep_fraction <= 1.0:
+            raise ValueError(
+                f"keep_fraction must be in (0, 1], got {self.keep_fraction}")
+
+    @property
+    def effective_bits(self) -> float:
+        """Bits per original dimension actually spent on the wire."""
+        return self.bits * self.keep_fraction
+
+    @property
+    def words_per_chunk(self) -> int:
+        return self.chunk * self.bits // 32
+
+    @property
+    def compresses(self) -> bool:
+        return self.strategy != "psum"
+
+    @property
+    def uses_ef(self) -> bool:
+        return self.compresses and self.error_feedback
+
+
+# ---------------------------------------------------------------------------
+# Deterministic per-leaf randomness (shared across workers)
+# ---------------------------------------------------------------------------
+def _frame_signs(leaf_idx: int, cfg: GradCompConfig) -> jax.Array:
+    """±1 diagonal of the leaf's Hadamard frame S = D·H (P = identity at
+    n = N = chunk). Pure function of (cfg.seed, leaf_idx)."""
+    key = jax.random.fold_in(jax.random.key(cfg.seed), leaf_idx)
+    frame = frames_lib.hadamard_frame(key, cfg.chunk, cfg.chunk)
+    return frame.signs
+
+
+def _stoch_key(leaf_idx, round_idx, cfg: GradCompConfig) -> jax.Array:
+    """Key for the per-round stochastic parts (dither / keep-mask)."""
+    base = jax.random.fold_in(jax.random.key(cfg.seed), 0x5eed)
+    return jax.random.fold_in(jax.random.fold_in(base, leaf_idx), round_idx)
+
+
+# ---------------------------------------------------------------------------
+# Leaf codec
+# ---------------------------------------------------------------------------
+def _to_chunks(x: jax.Array, chunk: int) -> jax.Array:
+    flat = x.astype(jnp.float32).reshape(-1)
+    c = -(-flat.size // chunk)
+    flat = jnp.pad(flat, (0, c * chunk - flat.size))
+    return flat.reshape(c, chunk)
+
+
+def encode_leaf(x: jax.Array, leaf_idx: int, cfg: GradCompConfig,
+                round_idx=0, key: jax.Array | None = None) -> dict:
+    """Encode one leaf → payload dict (see module docstring for the format).
+
+    `key` overrides the derived stochastic key (benchmarks that want
+    per-worker independent dither); frames are never affected by it.
+    """
+    chunks = _to_chunks(x, cfg.chunk)
+    signs = _frame_signs(leaf_idx, cfg).astype(jnp.float32)
+    embedded = kernel_ops.fwht(chunks * signs)               # x = H·D·y
+    scale = jnp.max(jnp.abs(embedded), axis=-1, keepdims=True)
+    if key is None and (cfg.dithered or cfg.keep_fraction < 1.0):
+        key = _stoch_key(leaf_idx, round_idx, cfg)
+    if cfg.dithered:
+        delta = 2.0 / (2 ** cfg.bits)
+        dither = jax.random.uniform(
+            jax.random.fold_in(key, 1), embedded.shape,
+            minval=-delta / 2, maxval=delta / 2)
+        embedded = embedded + dither * scale
+    words = kernel_ops.quantize_pack(embedded, scale, cfg.bits)
+    payload = {"words": words, "scale": scale}
+    if cfg.keep_fraction < 1.0:
+        keep = jax.random.uniform(
+            jax.random.fold_in(key, 2),
+            (chunks.shape[0], 1)) < cfg.keep_fraction
+        mask = keep.astype(jnp.float32)
+        # zero dropped chunks so the payload carries no ghost information
+        payload["words"] = words * mask.astype(words.dtype)
+        payload["scale"] = scale * mask
+        payload["mask"] = mask
+    return payload
+
+
+def decode_leaf(payload: dict, leaf_idx: int, size: int, shape, dtype,
+                cfg: GradCompConfig, extra_lead: int = 0) -> jax.Array:
+    """Decode a payload back to a leaf of `shape`.
+
+    With `extra_lead` = k the payload carries k leading stacked axes (e.g.
+    the all-gathered worker axis) and the result is lead + shape.
+    """
+    words, scale = payload["words"], payload["scale"]
+    x_hat = kernel_ops.unpack_dequant(words, scale, cfg.bits, cfg.chunk)
+    mask = payload.get("mask")
+    if mask is not None:
+        x_hat = x_hat * mask
+        if cfg.dithered and not cfg.error_feedback:
+            # unbiased 1/keep rescale (DQ-PSGD); the EF path must stay
+            # contractive, so it never rescales (see core.coding).
+            x_hat = x_hat / cfg.keep_fraction
+    signs = _frame_signs(leaf_idx, cfg).astype(x_hat.dtype)
+    y = kernel_ops.fwht(x_hat) * signs                       # y = D·H·x̂
+    lead = tuple(words.shape[:extra_lead])
+    flat = y.reshape(lead + (-1,))[..., :size]
+    return flat.reshape(lead + tuple(shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Tree codec (what the consensus strategies move around)
+# ---------------------------------------------------------------------------
+def compress_tree(tree, cfg: GradCompConfig, round_idx=0):
+    """Encode every leaf. Returns (payload tree, (treedef, leaf infos))."""
+    leaves, treedef = jax.tree.flatten(tree)
+    payloads = [encode_leaf(x, i, cfg, round_idx)
+                for i, x in enumerate(leaves)]
+    meta = (treedef, [(x.size, tuple(x.shape), x.dtype) for x in leaves])
+    return jax.tree.unflatten(treedef, payloads), meta
+
+
+def decode_payload(payloads, meta, cfg: GradCompConfig, extra_lead: int = 0):
+    """Inverse of compress_tree; `extra_lead` as in decode_leaf."""
+    treedef, infos = meta
+    plist = treedef.flatten_up_to(payloads)
+    outs = [decode_leaf(p, i, size, shape, dtype, cfg, extra_lead=extra_lead)
+            for i, (p, (size, shape, dtype)) in enumerate(zip(plist, infos))]
+    return jax.tree.unflatten(treedef, outs)
+
+
+# ---------------------------------------------------------------------------
+# Wire audit — the analytic bytes-on-wire formula
+# ---------------------------------------------------------------------------
+def wire_bytes_tree(tree, cfg: GradCompConfig, num_workers: int = 1) -> dict:
+    """Exact bytes a worker puts on the wire per step, vs f32 all-reduce.
+
+    Per leaf with C = ⌈size/chunk⌉ chunks, each kept chunk costs
+    chunk·bits/8 payload bytes + 4 bytes for its f32 scale; in the
+    sub-linear regime (keep_fraction < 1) the expected kept count is
+    C·keep_fraction and a 1-bit-per-chunk keep mask rides along.
+    """
+    f32_bytes = 0
+    payload_bytes = 0.0
+    for leaf in jax.tree.leaves(tree):
+        size = int(leaf.size)
+        f32_bytes += size * jnp.dtype(jnp.float32).itemsize
+        c = -(-size // cfg.chunk)
+        per_chunk = cfg.chunk * cfg.bits // 8 + 4
+        if cfg.keep_fraction < 1.0:
+            payload_bytes += cfg.keep_fraction * c * per_chunk + (c + 7) // 8
+        else:
+            payload_bytes += c * per_chunk
+    if cfg.keep_fraction >= 1.0:
+        payload_bytes = int(payload_bytes)
+    return {
+        "f32_bytes": f32_bytes,
+        "payload_bytes": payload_bytes,
+        "compression_x": f32_bytes / payload_bytes,
+        "num_workers": num_workers,
+        # allgather_packed: each worker sends its payload and receives m−1
+        "allgather_rx_bytes": payload_bytes * max(num_workers - 1, 0),
+    }

@@ -1,0 +1,115 @@
+"""PartitionSpec rules: how params / batches land on the ("data","model") mesh.
+
+Parameter rules (Megatron-style tensor parallelism over the "model" axis):
+
+  * embed   (V, d)        — vocab-sharded rows: each shard embeds its slice,
+                            the gather at lookup is GSPMD's problem.
+  * head    (d, V)        — vocab-sharded columns (column-parallel output
+                            projection; the softmax reduction stays local
+                            per shard in chunked_softmax_xent).
+  * wq/wk/wv, w_gate/w_up — column-parallel (shard the output features),
+  * wo, w_down            — row-parallel (shard the input features), pairing
+                            with the column-parallel producer so the only
+                            cross-shard communication is one all-reduce.
+  * e_gate/e_up/e_down    — expert-parallel on the expert dim when
+                            E % model_axis == 0 (arctic: 128/16), else fall
+                            back to the d_ff dim (mixtral: 8 experts).
+  * 1-D leaves (norms)    — replicated.
+
+Every rule is guarded by divisibility: a dim is only sharded when
+`dim % model_axis == 0`, else the next candidate axis is tried and finally
+the leaf is replicated. Block leaves carry a leading stacked-layer axis
+(lax.scan over layers) which is never sharded.
+
+Batch rules: leaf dim 0 is the global batch, sharded over the data axes
+("pod","data" on the multi-pod mesh) when divisible — `data_axes_for`
+drops axes until the batch divides.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def shardable(dim: int, axis_size: int) -> bool:
+    """Can a dimension of `dim` elements be split `axis_size` ways evenly?"""
+    return axis_size > 0 and dim % axis_size == 0
+
+
+# Candidate eff-axis preferences per leaf basename. Axes are indices into the
+# per-layer shape (leading stacked-layer axis stripped); negative = from end.
+_AXIS_PREFS = {
+    "embed": (0,),              # (V, d): vocab rows
+    "head": (-1,),              # (d, V): vocab cols
+    "wq": (-1,), "wk": (-1,), "wv": (-1,),      # column-parallel
+    "w_gate": (-1,), "w_up": (-1,),
+    "wo": (0,), "w_down": (0,),                 # row-parallel
+    "router": (-1,),            # (d, E): shard experts when divisible
+    "e_gate": (0, -1), "e_up": (0, -1),         # (E, d, f): experts, else d_ff
+    "e_down": (0, 1),                           # (E, f, d): experts, else d_ff
+}
+
+
+def param_spec(name: str, shape: tuple, model_axis: int,
+               in_blocks: bool) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    `name` is the dotted tree path (e.g. ".blocks.wq"), `in_blocks` marks
+    leaves with a leading stacked-layer axis (never sharded).
+    """
+    lead = 1 if in_blocks else 0
+    eff = shape[lead:]
+    replicated = P(*([None] * len(shape)))
+    if model_axis <= 1 or len(eff) < 2:
+        return replicated
+    base = name.rsplit(".", 1)[-1]
+    # unknown leaves (ssm / xlstm inner weights): prefer the last axis, then
+    # earlier ones — output-feature sharding composes best with the matmuls.
+    prefs = _AXIS_PREFS.get(base, tuple(range(len(eff) - 1, -1, -1)))
+    for ax in prefs:
+        ax = ax % len(eff)
+        if shardable(eff[ax], model_axis):
+            entries = [None] * len(eff)
+            entries[ax] = "model"
+            return P(*([None] * lead), *entries)
+    return replicated
+
+
+def param_specs(params, model_axis: int):
+    """Tree of PartitionSpecs matching `params` (arrays or ShapeDtypeStructs)."""
+
+    def name_of(path) -> str:
+        parts = []
+        for k in path:
+            parts.append(str(getattr(k, "key", getattr(k, "idx", k))))
+        return "." + ".".join(parts)
+
+    def visit(path, leaf):
+        name = name_of(path)
+        return param_spec(name, tuple(leaf.shape), model_axis,
+                          in_blocks=".blocks." in name + ".")
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def data_axes_for(global_batch: int, mesh) -> tuple:
+    """The mesh axes the batch dim shards over (largest divisible prefix)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    while axes and global_batch % math.prod(mesh.shape[a] for a in axes):
+        axes = axes[1:]
+    return axes
+
+
+def batch_specs(batch, mesh):
+    """PartitionSpecs for a batch pytree: dim 0 over the data axes."""
+
+    def spec(leaf):
+        axes = data_axes_for(leaf.shape[0], mesh)
+        if not axes:
+            return P(*([None] * len(leaf.shape)))
+        first = axes if len(axes) > 1 else axes[0]
+        return P(first, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree.map(spec, batch)

@@ -123,13 +123,18 @@ def run_combo(arch: str, shape_name: str, multi_pod: bool,
         # publishes the abstract mesh so in-model sharding hints
         # (with_sharding_constraint on raw PartitionSpecs, e.g. the MoE
         # expert-parallel dispatch buffer) resolve during tracing.
-        jax.set_mesh(mesh)
+        # (compat: no-op on jax 0.4.x, where the `with mesh:` context below
+        # is what repro.compat.get_mesh falls back to.)
+        from repro.compat import set_mesh
+        set_mesh(mesh)
         with mesh:
             lowered, model_flops = build_lowered(cfg, shape, mesh, gc,
                                                  opt_name)
             compiled = lowered.compile()
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):  # jax 0.4.x: one dict/device
+                cost = cost[0]
             text = compiled.as_text()
         n_dev = mesh.size
         roof = hlo_analysis.roofline_terms(cost, text, model_flops, n_dev)

@@ -38,13 +38,16 @@ def train(cfg, *, steps: int, batch_size: int, seq_len: int,
         cfg, opt, gc, mesh, jax.random.key(seed))
 
     n_params = sum(x.size for x in jax.tree.leaves(params))
-    audit = wire_bytes_tree(params, gc, step_lib.num_workers(mesh))
     print(f"model={cfg.name} params={n_params/1e6:.1f}M "
           f"workers={step_lib.num_workers(mesh)} strategy={gc.strategy} "
-          f"R={gc.effective_bits} bits/dim")
-    print(f"wire audit: f32={audit['f32_bytes']/2**20:.1f}MiB → "
-          f"payload={audit['payload_bytes']/2**20:.1f}MiB "
-          f"({audit['compression_x']:.1f}× smaller)")
+          f"R={gc.effective_bits if gc.compresses else 32} bits/dim")
+    if gc.compresses:
+        audit = wire_bytes_tree(params, gc, step_lib.num_workers(mesh))
+        print(f"wire audit: f32={audit['f32_bytes']/2**20:.1f}MiB → "
+              f"payload={audit['payload_bytes']/2**20:.1f}MiB "
+              f"({audit['compression_x']:.1f}× smaller)")
+    else:
+        print("wire audit: uncompressed f32 all-reduce (psum)")
 
     losses = []
     t0 = time.time()
@@ -75,13 +78,22 @@ def main(argv=None):
     ap.add_argument("--bits", type=int, default=4, choices=(1, 2, 4, 8))
     ap.add_argument("--strategy", default="allgather_packed",
                     choices=("psum", "psum_decoded", "allgather_packed"))
+    ap.add_argument("--keep-fraction", type=float, default=1.0,
+                    help="chunk keep rate: R_eff = bits × keep (< 1 is the "
+                         "paper's sub-linear regime)")
+    ap.add_argument("--dithered", action="store_true",
+                    help="unbiased dithered codec — drops the params-sized "
+                         "error-feedback state")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args(argv)
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
            else configs.get(args.arch))
-    gc = GradCompConfig(bits=args.bits, strategy=args.strategy)
+    gc = GradCompConfig(bits=args.bits, strategy=args.strategy,
+                        keep_fraction=args.keep_fraction,
+                        dithered=args.dithered,
+                        error_feedback=not args.dithered)
     train(cfg, steps=args.steps, batch_size=args.batch, seq_len=args.seq,
           gc=gc, lr=args.lr, ckpt_dir=args.ckpt_dir)
 

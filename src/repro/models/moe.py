@@ -26,13 +26,17 @@ def _hint_expert_sharding(x: jax.Array) -> jax.Array:
     the output of the scatter pinned expert-sharded, the scatter partitions
     by index-masking per shard and the buffer never crosses the ICI.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.compat import get_mesh
+    mesh = get_mesh()
     if (mesh is not None and "model" in mesh.axis_names
             and mesh.shape["model"] > 1
             and x.shape[0] % mesh.shape["model"] == 0):
         from jax.sharding import PartitionSpec as P
         spec = P("model", *([None] * (x.ndim - 1)))
-        return jax.lax.with_sharding_constraint(x, spec)
+        try:
+            return jax.lax.with_sharding_constraint(x, spec)
+        except Exception:  # noqa: BLE001 — inside a fully-manual shard_map
+            return x       # region the axis is unavailable; hint is optional
     return x
 
 

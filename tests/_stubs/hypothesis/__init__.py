@@ -1,0 +1,109 @@
+"""Tiny deterministic stand-in for `hypothesis` (offline test container).
+
+Only used when the real hypothesis is not installed — tests/conftest.py adds
+this directory to sys.path as a fallback, so `pip install .[test]` (CI, dev
+machines) always wins. Implements exactly what this repo's property tests
+use: @given with positional/keyword strategies, @settings(max_examples,
+deadline), st.integers / st.sampled_from / st.floats / st.booleans.
+
+Draws are deterministic per test (seeded by the test's qualified name), so a
+failing example reproduces on re-run. No shrinking — the drawn kwargs appear
+in the assertion traceback instead.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+__version__ = "0.0.stub"
+
+
+class SearchStrategy:
+    def __init__(self, draw, label: str):
+        self._draw = draw
+        self.label = label
+
+    def example_from(self, rng: random.Random):
+        return self._draw(rng)
+
+    def __repr__(self):
+        return f"st.{self.label}"
+
+
+class strategies:  # noqa: N801 — mirrors `hypothesis.strategies` module use
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 2**31 - 1):
+        return SearchStrategy(lambda r: r.randint(min_value, max_value),
+                              f"integers({min_value}, {max_value})")
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return SearchStrategy(lambda r: r.choice(elements),
+                              f"sampled_from({elements})")
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_):
+        return SearchStrategy(lambda r: r.uniform(min_value, max_value),
+                              f"floats({min_value}, {max_value})")
+
+    @staticmethod
+    def booleans():
+        return SearchStrategy(lambda r: r.random() < 0.5, "booleans()")
+
+
+st = strategies
+
+
+def settings(max_examples: int = 10, deadline=None, **_ignored):
+    """Attach settings; must sit between @given and the test function."""
+
+    def deco(fn):
+        fn._stub_settings = {"max_examples": max_examples}
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Run the test once per drawn example (max_examples, default 10)."""
+
+    def deco(fn):
+        n = getattr(fn, "_stub_settings", {}).get("max_examples", 10)
+        sig = inspect.signature(fn)
+        # real hypothesis assigns positional strategies to the RIGHTMOST
+        # parameters (leading params stay free for pytest fixtures)
+        free = [p for p in sig.parameters if p not in kw_strategies]
+        pos_names = free[len(free) - len(arg_strategies):]
+        drawn_names = set(pos_names) | set(kw_strategies)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = random.Random(fn.__qualname__)
+            for _ in range(n):
+                drawn = {name: s.example_from(rng)
+                         for name, s in zip(pos_names, arg_strategies)}
+                drawn.update({k: s.example_from(rng)
+                              for k, s in kw_strategies.items()})
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (hypothesis stub): {drawn}"
+                    ) from e
+
+        # pytest must only see the NON-drawn parameters (fixtures), else it
+        # tries to resolve the strategy-bound names as fixtures.
+        del wrapper.__wrapped__
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items()
+            if name not in drawn_names])
+        return wrapper
+
+    return deco
+
+
+def assume(condition) -> bool:
+    """No-op acceptance (the stub has no example rejection machinery)."""
+    return bool(condition)

@@ -6,6 +6,24 @@ os.environ.pop("XLA_FLAGS", None)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# Property tests use hypothesis; the offline container has no wheel for it,
+# so fall back to the deterministic mini-stub in tests/_stubs. A real
+# installed hypothesis (CI: `pip install .[test]`) always takes precedence.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_stubs"))
+
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+import pytest  # noqa: E402
+
+from repro.launch.mesh import make_host_mesh  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh():
+    """The shared 1×1 ("data","model") host mesh every dist test runs on."""
+    return make_host_mesh(data=1, model=1)

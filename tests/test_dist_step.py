@@ -8,13 +8,9 @@ from repro import configs
 from repro.data import batch_for_shape
 from repro.dist import step as step_lib
 from repro.dist.gradcomp import GradCompConfig
-from repro.launch.mesh import make_host_mesh
 from repro.optimizer import adamw, sgd
 
-
-@pytest.fixture(scope="module")
-def mesh():
-    return make_host_mesh(data=1, model=1)
+# the `mesh` fixture (shared 1×1 host mesh) comes from tests/conftest.py
 
 
 @pytest.mark.parametrize("strategy", ["psum", "psum_decoded",

@@ -108,14 +108,12 @@ def test_dithered_codec_unbiased_over_rounds():
     assert rel < rel_det / 3          # bias ≪ single-shot NN error
 
 
-def test_dithered_training_without_ef(mesh=None):
+def test_dithered_training_without_ef(mesh):
     """Dithered codec + NO error feedback still fits a fixed batch."""
     from repro import configs
     from repro.data import batch_for_shape
     from repro.dist import step as step_lib
-    from repro.launch.mesh import make_host_mesh
     from repro.optimizer import adamw
-    mesh = make_host_mesh(1, 1)
     cfg = configs.get_reduced("llama3.2-3b")
     gc = G.GradCompConfig(bits=4, chunk=256, dithered=True,
                           error_feedback=False)
@@ -136,3 +134,24 @@ def test_strategy_validation():
         G.GradCompConfig(bits=3)
     with pytest.raises(ValueError):
         G.GradCompConfig(chunk=100)
+
+
+@given(bits=st.sampled_from([1, 2]),
+       keep=st.sampled_from([0.25, 0.5, 0.75]),
+       n=st.integers(100, 5000))
+@settings(max_examples=20, deadline=None)
+def test_wire_audit_sublinear_matches_analytic(bits, keep, n):
+    """Sub-linear budget (R_eff = bits·keep < 2): the audited bytes-on-wire
+    must equal the analytic formula — expected kept chunks × (packed words +
+    f32 chunk scale) + the 1-bit-per-chunk keep mask. The chunk-level scale
+    overhead is exactly what makes R_eff fractional."""
+    cfg = G.GradCompConfig(bits=bits, chunk=64, keep_fraction=keep)
+    assert cfg.effective_bits == pytest.approx(bits * keep)
+    tree = {"w": jnp.zeros((n,))}
+    audit = G.wire_bytes_tree(tree, cfg, num_workers=4)
+    chunks = -(-n // 64)
+    expect = keep * chunks * (64 * bits // 8 + 4) + (chunks + 7) // 8
+    assert audit["f32_bytes"] == n * 4
+    assert audit["payload_bytes"] == pytest.approx(expect)
+    assert audit["compression_x"] == pytest.approx(n * 4 / expect)
+    assert audit["allgather_rx_bytes"] == pytest.approx(3 * expect)
