@@ -1,0 +1,138 @@
+"""Federated convergence vs. total bits: heterogeneous budgets beat uniform.
+
+    PYTHONPATH=src python -m benchmarks.fed_heterogeneous
+
+The client–server counterpart of the paper's consensus experiments: m clients
+hold least-squares shards whose signal scales span two orders of magnitude,
+so their update norms are wildly heterogeneous. At a FIXED total budget
+(Σ R_i = m·R̄ bits per model dimension per round), splitting the budget
+  * uniformly starves the dominant clients (their NDSC contraction factor
+    2^{2−R}√log(2·chunk) exceeds 1 at R̄ = 1 — the run destabilizes), while
+  * norm-proportionally / by water-filling gives the heavy clients enough
+    bits to stay contractive and spends ~nothing on the negligible ones —
+    same total bits, orders of magnitude lower final loss.
+
+The run also checks the per-round wire-bytes ledger against the analytic
+`wire_bits` audit TO THE BYTE (exact_keep chunk subsampling makes the
+realized kept-chunk count deterministic), and exercises partial
+participation + straggler dropout with the EF21-style fedmem aggregator.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import print_table
+from repro.fed import (ClientConfig, FedConfig, Federation, ServerConfig,
+                       budget, registry)
+
+
+def make_problem(m: int = 8, dim: int = 128, per_client: int = 256,
+                 scale_span: float = 1.0, seed: int = 0):
+    """Least-squares shards with per-client signal scales logspace(±span)."""
+    ka, kx = jax.random.split(jax.random.key(seed))
+    scales = np.logspace(-scale_span, scale_span, m)
+    a = jax.random.normal(ka, (m, per_client, dim)) / jnp.sqrt(per_client)
+    x_true = jax.random.normal(kx, (dim,))
+    shards = [{"a": scales[i] * a[i], "b": scales[i] * (a[i] @ x_true)}
+              for i in range(m)]
+
+    def loss_fn(p, batch):
+        r = batch["a"] @ p["x"] - batch["b"]
+        return 0.5 * jnp.mean(r * r)
+
+    all_a = jnp.concatenate([s["a"] for s in shards])
+    all_b = jnp.concatenate([s["b"] for s in shards])
+
+    def global_loss(p):
+        r = all_a @ p["x"] - all_b
+        return 0.5 * jnp.mean(r * r)
+
+    h = (all_a.T @ all_a) / all_a.shape[0]
+    eigs = jnp.linalg.eigvalsh(h)
+    lr = float(2.0 / (eigs[-1] + eigs[0]))     # α* for the global quadratic
+    return shards, loss_fn, global_loss, x_true, lr
+
+
+def probe_norms(loss_fn, params, shards) -> list:
+    """Per-client update-norm estimates ‖∇f_i(x₀)‖ for the allocators."""
+    return [float(jnp.linalg.norm(jax.grad(loss_fn)(params, s)["x"]))
+            for s in shards]
+
+
+def run(m: int = 8, dim: int = 128, avg_rate: float = 1.0, rounds: int = 50,
+        chunk: int = 64, seed: int = 0):
+    shards, loss_fn, global_loss, x_true, lr = make_problem(m, dim, seed=seed)
+    params = {"x": jnp.zeros(dim)}
+    norms = probe_norms(loss_fn, params, shards)
+    total = avg_rate * m
+    ccfg = ClientConfig(local_steps=1, lr=lr)
+
+    rows, results = [], {}
+    for policy in ("uniform", "norm_proportional", "waterfill"):
+        rates = budget.allocate(policy, total, m, norms=norms, min_rate=0.25)
+        codecs = [registry.make("ndsc", budget=float(r), chunk=chunk)
+                  for r in rates]
+        fed = Federation(loss_fn, params, shards, codecs, ccfg,
+                         ServerConfig(), seed=seed)
+        hist = fed.run(FedConfig(num_rounds=rounds, seed=seed),
+                       eval_fn=global_loss)
+        ledger_exact = all(
+            real == ana for real, ana in zip(hist["wire_bytes"],
+                                             hist["analytic_bytes"]))
+        assert ledger_exact, (
+            f"{policy}: realized wire bytes diverged from the analytic audit")
+        final = float(np.mean(hist["loss"][-5:]))
+        dist = float(jnp.linalg.norm(fed.server.params["x"] - x_true))
+        results[policy] = final
+        rows.append([policy,
+                     np.array2string(np.round(rates, 2), separator=","),
+                     f"{rates.sum():.2f}",
+                     f"{hist['wire_bytes'][0]:.0f}",
+                     f"{final:.3e}", f"{dist:.3e}",
+                     "byte-exact" if ledger_exact else "MISMATCH"])
+
+    print_table(
+        f"fed: convergence at equal total budget "
+        f"(m={m}, dim={dim}, R̄={avg_rate} bit/dim, {rounds} rounds)",
+        ["policy", "per-client R_i", "ΣR", "bytes/round", "final loss",
+         "‖x−x*‖", "ledger"], rows)
+
+    for hetero in ("norm_proportional", "waterfill"):
+        assert results[hetero] < results["uniform"], (
+            f"{hetero} ({results[hetero]:.3e}) should beat uniform "
+            f"({results['uniform']:.3e}) at equal total bits")
+    print("   heterogeneous allocation beats uniform at equal total bits: "
+          f"uniform {results['uniform']:.2e} → waterfill "
+          f"{results['waterfill']:.2e}")
+
+    # -- partial participation + stragglers, EF21-style server memory -------
+    rates = budget.allocate("waterfill", total, m, norms=norms, min_rate=0.25)
+    codecs = [registry.make("ndsc", budget=float(r), chunk=chunk)
+              for r in rates]
+    # stale memory slots re-apply old deltas: damp the server step (plain
+    # fedavg at server_lr=1 destabilizes under 50% participation here)
+    fed = Federation(loss_fn, params, shards, codecs, ccfg,
+                     ServerConfig(aggregator="fedmem", server_lr=0.25),
+                     seed=seed)
+    hist = fed.run(
+        FedConfig(num_rounds=rounds, participation=0.5, dropout=0.2,
+                  seed=seed),
+        eval_fn=global_loss)
+    assert all(r == a for r, a in zip(hist["wire_bytes"],
+                                      hist["analytic_bytes"]))
+    sampled = sum(len(p) + len(s) for p, s in zip(hist["participants"],
+                                                  hist["stragglers"]))
+    dropped = sum(len(s) for s in hist["stragglers"])
+    print_table(
+        "fed: 50% participation, 20% stragglers, fedmem aggregation",
+        ["rounds", "sampled", "dropped", "total MB", "final loss"],
+        [[rounds, sampled, dropped,
+          f"{hist['cum_bytes'][-1] / 1e6:.4f}",
+          f"{np.mean(hist['loss'][-5:]):.3e}"]])
+    return results
+
+
+if __name__ == "__main__":
+    run()

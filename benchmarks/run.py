@@ -13,12 +13,13 @@ import sys
 import time
 
 from benchmarks import (appJ_frames, appN_aspect_ratio,
-                        fig1a_compression_error, fig1b_dgddef_rate,
-                        fig1c_timing, fig1d_sparsified_gd, fig2_svm,
-                        fig3_multiworker, lemma4_covering,
+                        fed_heterogeneous, fig1a_compression_error,
+                        fig1b_dgddef_rate, fig1c_timing, fig1d_sparsified_gd,
+                        fig2_svm, fig3_multiworker, lemma4_covering,
                         modelscale_ablation, table1_compressors)
 
 ALL = {
+    "fed": fed_heterogeneous.run,
     "table1": table1_compressors.run,
     "fig1a": fig1a_compression_error.run,
     "fig1b": fig1b_dgddef_rate.run,

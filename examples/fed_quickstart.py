@@ -1,0 +1,58 @@
+"""Federated quickstart: 4 clients, compressed deltas, a bytes ledger.
+
+    PYTHONPATH=src python examples/fed_quickstart.py
+
+Each client fits a shared least-squares model on its own shard, ships its
+params-delta through the chunked NDSC codec at 2 bits/dim (error feedback
+on), and the server FedAvgs the decoded deltas. The history carries a
+per-round wire-bytes ledger that matches the analytic audit to the byte.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import synthetic_regression
+from repro.fed import (ClientConfig, FedConfig, Federation, ServerConfig,
+                       registry)
+
+
+def main():
+    m, dim, per = 4, 64, 96
+    a, b, x_star = synthetic_regression(jax.random.key(0), m * per, dim,
+                                        design="gauss", model="gauss")
+    shards = [{"a": a[i * per:(i + 1) * per], "b": b[i * per:(i + 1) * per]}
+              for i in range(m)]
+
+    def loss_fn(params, batch):
+        r = batch["a"] @ params["x"] - batch["b"]
+        return 0.5 * jnp.mean(r * r)
+
+    def global_loss(params):
+        r = a @ params["x"] - b
+        return 0.5 * jnp.mean(r * r)
+
+    params = {"x": jnp.zeros(dim)}
+    codec = registry.make("ndsc", budget=2.0, chunk=32)
+    fed = Federation(loss_fn, params, shards, codec,
+                     ClientConfig(local_steps=2, lr=0.5),
+                     ServerConfig(aggregator="fedavg"))
+    hist = fed.run(FedConfig(num_rounds=30), eval_fn=global_loss)
+
+    f32 = 4 * dim * m
+    print(f"== fed quickstart: {m} clients, dim={dim}, NDSC R=2 bits/dim ==")
+    for t in range(0, 30, 5):
+        print(f"   round {t:2d}: loss {hist['loss'][t]:.4e}   "
+              f"wire {hist['wire_bytes'][t]:.0f} B "
+              f"(f32 would be {f32} B)")
+    print(f"   final loss {hist['loss'][-1]:.4e}, "
+          f"total {hist['cum_bytes'][-1] / 1e3:.1f} kB on the wire, "
+          f"ledger ≡ audit: "
+          f"{all(r == a_ for r, a_ in zip(hist['wire_bytes'], hist['analytic_bytes']))}")
+    print(f"   ‖x − x*‖ = "
+          f"{float(jnp.linalg.norm(fed.server.params['x'] - x_star)):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -116,14 +116,22 @@ def randk(k_fraction: float, quant_levels: Optional[int] = None,
           unbiased: bool = False) -> Compressor:
     def fn(key, y):
         km, kq = jax.random.split(key)
-        mask = q.subsample_mask(km, y.shape, k_fraction)
+        # EXACTLY k survivors per row (uniform random subset), so the
+        # realized payload matches the k·payload + log2(C(n,k)) wire audit;
+        # an i.i.d. Bernoulli mask only matches it in expectation.
+        k = max(1, int(round(k_fraction * y.shape[-1])))
+        draw = jax.random.uniform(km, y.shape)
+        thresh = jnp.sort(draw, axis=-1)[..., k - 1:k]
+        mask = (draw <= thresh).astype(y.dtype)
         kept = y * mask
         if quant_levels is not None:
             scale = jnp.max(jnp.abs(kept), axis=-1, keepdims=True)
             safe = jnp.maximum(scale, jnp.finfo(y.dtype).tiny)
             kept = q.uniform_quantize(kept / safe, quant_levels) * scale * mask
         if unbiased:
-            kept = kept / k_fraction
+            # each coordinate survives w.p. exactly k/n under the exact-k
+            # mask (NOT k_fraction, which k was rounded from)
+            kept = kept * (y.shape[-1] / k)
         return kept
 
     def bits(n):

@@ -55,6 +55,10 @@ class GradCompConfig:
                    DQ-PSGD path; lets training drop the params-sized EF).
     keep_fraction  chunk-level subsampling for the sub-linear regime
                    (R_eff = bits·keep_fraction < 1, App. E.2).
+    exact_keep     keep EXACTLY ⌈keep_fraction·C⌉ chunks per leaf (a shared
+                   random subset of fixed size) instead of i.i.d. Bernoulli —
+                   the realized bytes-on-wire then equal the analytic audit
+                   every round, which the repro.fed ledger relies on.
     """
 
     bits: int = 4
@@ -63,6 +67,7 @@ class GradCompConfig:
     error_feedback: bool = True
     dithered: bool = False
     keep_fraction: float = 1.0
+    exact_keep: bool = False
     seed: int = 0
 
     def __post_init__(self):
@@ -86,6 +91,12 @@ class GradCompConfig:
     @property
     def words_per_chunk(self) -> int:
         return self.chunk * self.bits // 32
+
+    def kept_chunks(self, c: int) -> int:
+        """Chunks on the wire for a leaf of c chunks under exact_keep."""
+        if self.keep_fraction >= 1.0:
+            return c
+        return max(1, int(round(self.keep_fraction * c)))
 
     @property
     def compresses(self) -> bool:
@@ -123,14 +134,30 @@ def _to_chunks(x: jax.Array, chunk: int) -> jax.Array:
     return flat.reshape(c, chunk)
 
 
+def _pad_rows(t: jax.Array, rows: int) -> jax.Array:
+    """Zero-pad the leading axis of t up to `rows`."""
+    if t.shape[0] == rows:
+        return t
+    return jnp.pad(t, ((0, rows - t.shape[0]),) + ((0, 0),) * (t.ndim - 1))
+
+
 def encode_leaf(x: jax.Array, leaf_idx: int, cfg: GradCompConfig,
-                round_idx=0, key: jax.Array | None = None) -> dict:
+                round_idx=0, key: jax.Array | None = None,
+                logical_chunks: int | None = None) -> dict:
     """Encode one leaf → payload dict (see module docstring for the format).
 
     `key` overrides the derived stochastic key (benchmarks that want
     per-worker independent dither); frames are never affected by it.
+
+    `logical_chunks` is the PRE-PAD chunk count ⌈size/chunk⌉ of the leaf;
+    pass it when `x` arrives already padded to extra all-zero chunks (the
+    ZeRO-1 owned layout pads to a multiple of the worker count). The
+    stochastic draws (dither, keep-mask) happen at the logical count and are
+    zero-extended over the padding, so the payload of the padded layout is
+    bit-exact with the un-padded all-gather encode on the real chunks.
     """
     chunks = _to_chunks(x, cfg.chunk)
+    lc = chunks.shape[0] if logical_chunks is None else logical_chunks
     signs = _frame_signs(leaf_idx, cfg).astype(jnp.float32)
     embedded = kernel_ops.fwht(chunks * signs)               # x = H·D·y
     scale = jnp.max(jnp.abs(embedded), axis=-1, keepdims=True)
@@ -139,16 +166,21 @@ def encode_leaf(x: jax.Array, leaf_idx: int, cfg: GradCompConfig,
     if cfg.dithered:
         delta = 2.0 / (2 ** cfg.bits)
         dither = jax.random.uniform(
-            jax.random.fold_in(key, 1), embedded.shape,
+            jax.random.fold_in(key, 1), (lc, cfg.chunk),
             minval=-delta / 2, maxval=delta / 2)
-        embedded = embedded + dither * scale
+        embedded = embedded + _pad_rows(dither, chunks.shape[0]) * scale
     words = kernel_ops.quantize_pack(embedded, scale, cfg.bits)
     payload = {"words": words, "scale": scale}
     if cfg.keep_fraction < 1.0:
-        keep = jax.random.uniform(
-            jax.random.fold_in(key, 2),
-            (chunks.shape[0], 1)) < cfg.keep_fraction
-        mask = keep.astype(jnp.float32)
+        draw = jax.random.uniform(jax.random.fold_in(key, 2), (lc, 1))
+        if cfg.exact_keep:
+            # fixed-size random subset: the k smallest draws stay on the wire
+            k = cfg.kept_chunks(lc)
+            thresh = jnp.sort(draw[:, 0])[k - 1]
+            keep = draw <= thresh
+        else:
+            keep = draw < cfg.keep_fraction
+        mask = _pad_rows(keep.astype(jnp.float32), chunks.shape[0])
         # zero dropped chunks so the payload carries no ghost information
         payload["words"] = words * mask.astype(words.dtype)
         payload["scale"] = scale * mask
@@ -208,8 +240,9 @@ def wire_bytes_tree(tree, cfg: GradCompConfig, num_workers: int = 1) -> dict:
 
     Per leaf with C = ⌈size/chunk⌉ chunks, each kept chunk costs
     chunk·bits/8 payload bytes + 4 bytes for its f32 scale; in the
-    sub-linear regime (keep_fraction < 1) the expected kept count is
-    C·keep_fraction and a 1-bit-per-chunk keep mask rides along.
+    sub-linear regime (keep_fraction < 1) the kept count is exactly
+    `cfg.kept_chunks(C)` under exact_keep (else C·keep_fraction in
+    expectation) and a 1-bit-per-chunk keep mask rides along.
     """
     f32_bytes = 0
     payload_bytes = 0.0
@@ -219,10 +252,12 @@ def wire_bytes_tree(tree, cfg: GradCompConfig, num_workers: int = 1) -> dict:
         c = -(-size // cfg.chunk)
         per_chunk = cfg.chunk * cfg.bits // 8 + 4
         if cfg.keep_fraction < 1.0:
-            payload_bytes += cfg.keep_fraction * c * per_chunk + (c + 7) // 8
+            kept = (cfg.kept_chunks(c) if cfg.exact_keep
+                    else cfg.keep_fraction * c)
+            payload_bytes += kept * per_chunk + (c + 7) // 8
         else:
             payload_bytes += c * per_chunk
-    if cfg.keep_fraction >= 1.0:
+    if cfg.keep_fraction >= 1.0 or cfg.exact_keep:
         payload_bytes = int(payload_bytes)
     return {
         "f32_bytes": f32_bytes,
@@ -232,3 +267,29 @@ def wire_bytes_tree(tree, cfg: GradCompConfig, num_workers: int = 1) -> dict:
         # allgather_packed: each worker sends its payload and receives m−1
         "allgather_rx_bytes": payload_bytes * max(num_workers - 1, 0),
     }
+
+
+def _payload_leaves(payloads) -> list:
+    """Flatten a payload tree to its per-leaf {"words", "scale", ...} dicts."""
+    return jax.tree.leaves(
+        payloads, is_leaf=lambda d: isinstance(d, dict) and "words" in d)
+
+
+def wire_bytes_payload(payloads, cfg: GradCompConfig) -> float:
+    """Bytes a CONCRETE encoded tree actually puts on the wire.
+
+    Counts only kept chunks (per the realized keep mask) at the packed-words
+    + f32-scale cost, plus the 1-bit-per-chunk mask when present — the
+    realized counterpart of `wire_bytes_tree`. Under `exact_keep` the two
+    agree to the byte every round (the repro.fed ledger asserts this).
+    """
+    per_chunk = cfg.chunk * cfg.bits // 8 + 4
+    total = 0.0
+    for p in _payload_leaves(payloads):
+        c = p["scale"].shape[-2]
+        mask = p.get("mask")
+        if mask is None:
+            total += c * per_chunk
+        else:
+            total += float(jnp.sum(mask)) * per_chunk + (c + 7) // 8
+    return total

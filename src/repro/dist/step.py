@@ -263,7 +263,8 @@ def make_zero_train_step(cfg, opt, gc: G.GradCompConfig, mesh,
             if e is not None:
                 u = u + e[0]
             mean_own, d_own = zero_lib.compressed_reduce_scatter(
-                u, i, gc, axes, m, round_idx)
+                u, i, gc, axes, m, round_idx,
+                logical_chunks=-(-size // gc.chunk))
             # zero the padding coords so optimizer state / EF stay clean and
             # the norms match the replicated path exactly
             widx = _worker_index(axes, mesh) if m > 1 else 0

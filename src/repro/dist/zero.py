@@ -69,16 +69,21 @@ def valid_mask(size: int, padded_chunks: int, chunk: int) -> jax.Array:
 
 def compressed_reduce_scatter(u: jax.Array, leaf_idx: int,
                               gc: G.GradCompConfig, axes, num_workers: int,
-                              round_idx=0):
+                              round_idx=0, logical_chunks: int | None = None):
     """One leaf's ZeRO-1 consensus step, inside shard_map (manual `axes`).
 
     u: worker-local (padded_chunks, chunk) gradient(+EF) chunks.
+    `logical_chunks` is the leaf's PRE-PAD chunk count ⌈size/chunk⌉ — the
+    codec draws its stochastic parts (keep-mask, dither) at that count so the
+    payload stays bit-exact with the un-padded all-gather encode even at
+    keep_fraction < 1 (the padded chunks are always dropped).
     Returns (owned_mean (rows, chunk), decoded_own (padded_chunks, chunk)) —
     the owner-side consensus mean for this worker's rows, and the local
     decode of the worker's OWN payload (for its error-feedback update).
     """
     rows = u.shape[0] // num_workers
-    payload = G.encode_leaf(u, leaf_idx, gc, round_idx)
+    payload = G.encode_leaf(u, leaf_idx, gc, round_idx,
+                            logical_chunks=logical_chunks)
 
     def route(t):
         tm = t.reshape((num_workers, rows) + t.shape[1:])

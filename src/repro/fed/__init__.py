@@ -1,0 +1,28 @@
+"""repro.fed — federated client–server simulation with heterogeneous budgets.
+
+The paper's NDSC codec under its harshest setting: per-client bit budgets
+R_i, partial participation, stragglers, error feedback on params-deltas, and
+a per-round wire-bytes ledger that matches the analytic audit to the byte.
+
+    from repro.fed import (Federation, FedConfig, ClientConfig, ServerConfig,
+                           registry, budget)
+
+    codec = registry.make("ndsc", budget=2.0, chunk=128)
+    fed = Federation(loss_fn, params, shards, codec)
+    history = fed.run(FedConfig(num_rounds=50), eval_fn=global_loss)
+"""
+from repro.fed import budget, registry
+from repro.fed.clients import (ClientConfig, ClientState, init_client_state,
+                               local_sgd, make_client_round,
+                               make_cohort_round)
+from repro.fed.registry import TreeCodec, available, make
+from repro.fed.rounds import FedConfig, Federation
+from repro.fed.server import (AGGREGATORS, ServerConfig, ServerState,
+                              aggregate, decode_deltas, init_server)
+
+__all__ = [
+    "AGGREGATORS", "ClientConfig", "ClientState", "FedConfig", "Federation",
+    "ServerConfig", "ServerState", "TreeCodec", "aggregate", "available",
+    "budget", "decode_deltas", "init_client_state", "init_server",
+    "local_sgd", "make", "make_client_round", "make_cohort_round", "registry",
+]

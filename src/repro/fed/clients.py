@@ -1,0 +1,125 @@
+"""Client-side state and local update loops for the federated simulation.
+
+A client holds an error-feedback memory (the DGD-DEF mechanism of paper
+Alg. 1, applied to params-DELTAS rather than gradients), a PRNG lane and a
+round counter. One federated round on client i:
+
+    local   ← local_steps of SGD on the client's shard from params
+    Δ_i     ← local − params                      (the params-delta)
+    u_i     ← Δ_i + e_i                           (error compensation)
+    wire    ← E_i(u_i)          at budget R_i     (registry.TreeCodec)
+    e_i     ← u_i − D_i(wire)                     (memory for next round)
+
+`ClientState` is a flat pytree of arrays, so a cohort of clients sharing one
+(codec, config) pair stacks into a single state and runs under `jax.vmap`
+(`make_cohort_round`); heterogeneous-budget clients run one compiled
+`make_client_round` per distinct codec (`repro.fed.rounds` caches these).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientConfig:
+    """Local-update hyperparameters (shared by a cohort, static under jit).
+
+    batch_size None runs full-batch local GD (deterministic given params);
+    otherwise each local step samples `batch_size` examples with replacement
+    from the client shard using the client's PRNG lane.
+    """
+
+    local_steps: int = 1
+    lr: float = 0.1
+    batch_size: Optional[int] = None
+    error_feedback: bool = True
+
+
+class ClientState(NamedTuple):
+    ef: Any               # error-feedback tree (f32, zeros when disabled)
+    key: jax.Array        # PRNG lane, split every participated round
+    rounds_seen: jax.Array  # int32 participation counter
+
+
+def init_client_state(params, key: jax.Array,
+                      cfg: ClientConfig = ClientConfig()) -> ClientState:
+    ef = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+          if cfg.error_feedback else {})
+    return ClientState(ef=ef, key=key, rounds_seen=jnp.zeros((), jnp.int32))
+
+
+def num_examples(data) -> int:
+    """Leading-axis length of a client shard (a pytree of stacked arrays)."""
+    return int(jax.tree.leaves(data)[0].shape[0])
+
+
+def local_sgd(loss_fn: Callable, params, data, key: jax.Array,
+              cfg: ClientConfig):
+    """cfg.local_steps of (mini-batch) SGD on this client's shard."""
+    n = num_examples(data)
+
+    def one_step(p, k):
+        if cfg.batch_size is None:
+            batch = data
+        else:
+            idx = jax.random.randint(k, (cfg.batch_size,), 0, n)
+            batch = jax.tree.map(lambda a: a[idx], data)
+        g = jax.grad(loss_fn)(p, batch)
+        return jax.tree.map(
+            lambda x, gg: (x - cfg.lr * gg.astype(jnp.float32)
+                           ).astype(x.dtype), p, g), None
+
+    keys = jax.random.split(key, cfg.local_steps)
+    out, _ = jax.lax.scan(one_step, params, keys)
+    return out
+
+
+def _round_body(loss_fn: Callable, codec, cfg: ClientConfig, meta):
+    def fn(global_params, data, state: ClientState, round_idx):
+        k_local, k_enc, k_next = jax.random.split(state.key, 3)
+        local = local_sgd(loss_fn, global_params, data, k_local, cfg)
+        delta = jax.tree.map(
+            lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+            local, global_params)
+        u = (jax.tree.map(jnp.add, delta, state.ef)
+             if cfg.error_feedback else delta)
+        wire = codec.encode(k_enc, u, round_idx)
+        if cfg.error_feedback:
+            decoded = codec.decode(wire, meta)
+            ef = jax.tree.map(jnp.subtract, u, decoded)
+        else:
+            ef = state.ef
+        return wire, ClientState(ef=ef, key=k_next,
+                                 rounds_seen=state.rounds_seen + 1)
+
+    return fn
+
+
+def make_client_round(loss_fn: Callable, codec, cfg: ClientConfig,
+                      params_template) -> Callable:
+    """jit'd (global_params, data, state, round_idx) → (wire, new state).
+
+    `codec` is a registry.TreeCodec; its static meta is taken once from
+    `params_template` so the returned function is a pure jit-able closure.
+    The wire payload is what the server decodes; the client decodes its OWN
+    payload locally for the error-feedback update (no extra communication,
+    exactly as in repro.dist.step)."""
+    return jax.jit(_round_body(loss_fn, codec, cfg,
+                               codec.meta(params_template)))
+
+
+def make_cohort_round(loss_fn: Callable, codec, cfg: ClientConfig,
+                      params_template) -> Callable:
+    """vmapped client round for a cohort sharing (codec, cfg).
+
+    (global_params, stacked data, stacked states, round_idx) →
+    (stacked wires, stacked states). Each lane uses its own PRNG key, so
+    dither / keep-mask draws stay independent across clients while the
+    per-leaf FRAMES (pure functions of the codec seed) remain shared — the
+    server decodes every lane with the same frames."""
+    fn = _round_body(loss_fn, codec, cfg, codec.meta(params_template))
+    return jax.jit(jax.vmap(fn, in_axes=(None, 0, 0, None)))

@@ -1,0 +1,166 @@
+"""The federated round driver: participation, stragglers, wire ledger.
+
+`Federation` wires the pieces together: per-client shards + budgets →
+registry codecs → jit-compiled client rounds (compiled ONCE per distinct
+(codec, client-config) pair and reused across rounds and clients) → server
+decode + aggregate. The host loop only does participant sampling, straggler
+dropout and the ledger; all numerics run inside jit.
+
+Round lifecycle (README has the diagram):
+
+  1. sample ⌈participation·m⌉ clients (deterministic per (seed, round)),
+  2. drop each sampled client as a straggler with prob. `dropout`,
+  3. surviving clients run their compiled round fn → payload + new EF state,
+  4. ledger records REALIZED payload bytes (codec.wire_bytes) and the
+     analytic audit (codec.wire_bits / 8) — equal to the byte for the NDSC
+     backend under exact_keep,
+  5. server decodes every payload with its client's codec and aggregates.
+
+Dropped/unsampled clients keep their EF memory and PRNG lane untouched —
+they never encoded, so there is nothing to feed back (straggler semantics).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.fed import clients as clients_lib
+from repro.fed import server as server_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    num_rounds: int = 50
+    participation: float = 1.0   # fraction of clients sampled per round
+    dropout: float = 0.0         # straggler prob. among the sampled
+    weighting: str = "uniform"   # "uniform" | "data_size"
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 < self.participation <= 1.0:
+            raise ValueError("participation must be in (0, 1]")
+        if not 0.0 <= self.dropout < 1.0:
+            raise ValueError("dropout must be in [0, 1)")
+        if self.weighting not in ("uniform", "data_size"):
+            raise ValueError(f"unknown weighting {self.weighting!r}")
+
+
+class Federation:
+    """A client–server simulation over `m = len(datas)` clients.
+
+    codecs / client_cfgs may be a single shared object or one per client
+    (heterogeneous budgets). All clients see the same `loss_fn(params,
+    batch)`; heterogeneity lives in the data shards and the budgets.
+    """
+
+    def __init__(self, loss_fn: Callable, params, datas: Sequence,
+                 codecs, client_cfgs=None,
+                 server_cfg: server_lib.ServerConfig = None, seed: int = 0):
+        m = len(datas)
+        self.loss_fn = loss_fn
+        self.datas = list(datas)
+        self.codecs = (list(codecs) if isinstance(codecs, (list, tuple))
+                       else [codecs] * m)
+        if client_cfgs is None:
+            client_cfgs = clients_lib.ClientConfig()
+        self.client_cfgs = (list(client_cfgs)
+                            if isinstance(client_cfgs, (list, tuple))
+                            else [client_cfgs] * m)
+        if len(self.codecs) != m or len(self.client_cfgs) != m:
+            raise ValueError("need one codec / client config per client")
+        self.server_cfg = server_cfg or server_lib.ServerConfig()
+        self.server = server_lib.init_server(params, self.server_cfg, m)
+        key = jax.random.key(seed)
+        self.states = [
+            clients_lib.init_client_state(params, jax.random.fold_in(key, i),
+                                          self.client_cfgs[i])
+            for i in range(m)]
+        self.metas = [c.meta(params) for c in self.codecs]
+        # one compiled round fn per distinct (codec, client config)
+        self._round_fns: dict = {}
+        for i in range(m):
+            k = (id(self.codecs[i]), id(self.client_cfgs[i]))
+            if k not in self._round_fns:
+                self._round_fns[k] = clients_lib.make_client_round(
+                    loss_fn, self.codecs[i], self.client_cfgs[i], params)
+        self._fn_of = [
+            self._round_fns[(id(self.codecs[i]), id(self.client_cfgs[i]))]
+            for i in range(m)]
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.datas)
+
+    # -- one round -----------------------------------------------------------
+    def sample_participants(self, cfg: FedConfig, round_idx: int):
+        """(participants, stragglers) — deterministic in (seed, round)."""
+        m = self.num_clients
+        rng = np.random.default_rng(
+            np.random.PCG64(cfg.seed * 1_000_003 + round_idx))
+        k = max(1, int(np.ceil(cfg.participation * m)))
+        sampled = sorted(rng.choice(m, size=k, replace=False).tolist())
+        if cfg.dropout <= 0.0:
+            return sampled, []
+        keep = rng.random(k) >= cfg.dropout
+        participants = [c for c, kp in zip(sampled, keep) if kp]
+        stragglers = [c for c, kp in zip(sampled, keep) if not kp]
+        return participants, stragglers
+
+    def run_round(self, cfg: FedConfig, round_idx: int) -> dict:
+        participants, stragglers = self.sample_participants(cfg, round_idx)
+        wires = []
+        realized = analytic = 0.0
+        for i in participants:
+            wire, self.states[i] = self._fn_of[i](
+                self.server.params, self.datas[i], self.states[i], round_idx)
+            wires.append(wire)
+            realized += self.codecs[i].wire_bytes(wire, self.metas[i])
+            analytic += self.codecs[i].wire_bits(self.server.params) / 8.0
+        if participants:
+            deltas = server_lib.decode_deltas(
+                wires, [self.codecs[i] for i in participants],
+                [self.metas[i] for i in participants])
+            weights = self._weights(cfg, participants)
+            slot_weights = (self._weights(cfg, range(self.num_clients))
+                            if (self.server_cfg.aggregator == "fedmem"
+                                and cfg.weighting != "uniform") else None)
+            self.server = server_lib.aggregate(
+                self.server, self.server_cfg, deltas, weights, participants,
+                slot_weights=slot_weights)
+        return {"round": round_idx, "participants": participants,
+                "stragglers": stragglers, "wire_bytes": realized,
+                "analytic_bytes": analytic}
+
+    def _weights(self, cfg: FedConfig, participants) -> np.ndarray:
+        if cfg.weighting == "data_size":
+            return np.array([clients_lib.num_examples(self.datas[i])
+                             for i in participants], dtype=np.float64)
+        return np.ones(len(participants))
+
+    # -- full run ------------------------------------------------------------
+    def run(self, cfg: FedConfig,
+            eval_fn: Optional[Callable[[Any], float]] = None) -> dict:
+        """Drive `cfg.num_rounds` rounds; returns the per-round history.
+
+        history keys: round, loss (if eval_fn), wire_bytes, analytic_bytes,
+        cum_bytes, participants, stragglers.
+        """
+        hist = {k: [] for k in ("round", "loss", "wire_bytes",
+                                "analytic_bytes", "cum_bytes",
+                                "participants", "stragglers")}
+        cum = 0.0
+        for t in range(cfg.num_rounds):
+            rec = self.run_round(cfg, t)
+            cum += rec["wire_bytes"]
+            hist["round"].append(t)
+            hist["wire_bytes"].append(rec["wire_bytes"])
+            hist["analytic_bytes"].append(rec["analytic_bytes"])
+            hist["cum_bytes"].append(cum)
+            hist["participants"].append(rec["participants"])
+            hist["stragglers"].append(rec["stragglers"])
+            if eval_fn is not None:
+                hist["loss"].append(float(eval_fn(self.server.params)))
+        return hist

@@ -1,0 +1,121 @@
+"""Server-side aggregation: decode heterogeneous payloads, update the model.
+
+Clients ship codec payloads with *different* chunk layouts (per-client
+budgets R_i map to different bits / keep-fraction configs), so the server
+first decodes every payload with that client's codec into a dense f32 delta
+tree — that is the reconciliation point — and only then aggregates:
+
+  fedavg   x ← x + η_s · Σ w_i Δ̂_i                   (weighted delta mean)
+  fedopt   server optimizer from repro.optimizer on the pseudo-gradient
+           g = −Σ w_i Δ̂_i (FedAdam / FedSGD-momentum, delta-compressed)
+  fedmem   EF21-style per-client server memory: slot h_i is refreshed by
+           every decoded Δ̂_i and the step uses the mean over ALL slots, so
+           non-participants contribute their last known update — smoothing
+           partial participation instead of amplifying it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.optimizer.optim import Optimizer, apply_updates
+
+AGGREGATORS = ("fedavg", "fedopt", "fedmem")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerConfig:
+    aggregator: str = "fedavg"
+    server_lr: float = 1.0                  # fedavg / fedmem step size
+    optimizer: Optional[Optimizer] = None   # required for fedopt
+
+    def __post_init__(self):
+        if self.aggregator not in AGGREGATORS:
+            raise ValueError(f"aggregator must be one of {AGGREGATORS}, "
+                             f"got {self.aggregator!r}")
+        if self.aggregator == "fedopt" and self.optimizer is None:
+            raise ValueError("fedopt needs a repro.optimizer Optimizer")
+
+
+class ServerState(NamedTuple):
+    params: Any
+    opt_state: Any    # fedopt only, else {}
+    memory: Any       # fedmem: per-client slots stacked on axis 0, else {}
+
+
+def init_server(params, cfg: ServerConfig, num_clients: int) -> ServerState:
+    opt_state = (cfg.optimizer.init(params)
+                 if cfg.aggregator == "fedopt" else {})
+    memory = (jax.tree.map(
+        lambda p: jnp.zeros((num_clients,) + tuple(p.shape), jnp.float32),
+        params) if cfg.aggregator == "fedmem" else {})
+    return ServerState(params=params, opt_state=opt_state, memory=memory)
+
+
+def decode_deltas(wires: Sequence, codecs: Sequence, metas: Sequence) -> list:
+    """Per-client payloads → dense f32 delta trees (the layout reconciliation
+    step: after this point budgets, chunk counts and masks are gone)."""
+    return [codec.decode(wire, meta)
+            for wire, codec, meta in zip(wires, codecs, metas)]
+
+
+def weighted_mean(deltas: Sequence, weights) -> Any:
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.sum(w)
+    acc = jax.tree.map(lambda x: w[0] * x.astype(jnp.float32), deltas[0])
+    for i, d in enumerate(deltas[1:], start=1):
+        acc = jax.tree.map(lambda a, x, i=i: a + w[i] * x.astype(jnp.float32),
+                           acc, d)
+    return acc
+
+
+def aggregate(state: ServerState, cfg: ServerConfig, deltas: Sequence,
+              weights, participant_ids: Optional[Sequence[int]] = None,
+              slot_weights=None) -> ServerState:
+    """One server step from the decoded participant deltas.
+
+    `participant_ids` (client indices aligned with `deltas`) is only needed
+    by fedmem to refresh the right memory slots; `slot_weights` (one per
+    client, ALL clients) weights fedmem's mean over the memory slots — the
+    fedmem counterpart of `weights`, which covers participants only."""
+    if not deltas:
+        return state
+    if cfg.aggregator == "fedavg":
+        mean = weighted_mean(deltas, weights)
+        params = jax.tree.map(
+            lambda p, d: (p.astype(jnp.float32)
+                          + cfg.server_lr * d).astype(p.dtype),
+            state.params, mean)
+        return ServerState(params, state.opt_state, state.memory)
+
+    if cfg.aggregator == "fedopt":
+        mean = weighted_mean(deltas, weights)
+        pseudo_grad = jax.tree.map(jnp.negative, mean)
+        updates, opt_state = cfg.optimizer.update(
+            pseudo_grad, state.opt_state, state.params)
+        return ServerState(apply_updates(state.params, updates),
+                           opt_state, state.memory)
+
+    # fedmem: refresh participating slots, step with the mean over ALL slots
+    if participant_ids is None:
+        raise ValueError("fedmem aggregation needs participant_ids")
+    idx = jnp.asarray(list(participant_ids), jnp.int32)
+    stacked = jax.tree.map(
+        lambda *xs: jnp.stack([x.astype(jnp.float32) for x in xs]), *deltas)
+    memory = jax.tree.map(lambda m, d: m.at[idx].set(d),
+                          state.memory, stacked)
+    if slot_weights is None:
+        direction = jax.tree.map(lambda m: jnp.mean(m, axis=0), memory)
+    else:
+        sw = jnp.asarray(slot_weights, jnp.float32)
+        sw = sw / jnp.sum(sw)
+        direction = jax.tree.map(
+            lambda m: jnp.tensordot(sw, m, axes=1), memory)
+    params = jax.tree.map(
+        lambda p, d: (p.astype(jnp.float32)
+                      + cfg.server_lr * d).astype(p.dtype),
+        state.params, direction)
+    return ServerState(params, state.opt_state, memory)

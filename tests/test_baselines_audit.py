@@ -1,0 +1,138 @@
+"""Property tests: every baseline Compressor's wire_bits audit is honest.
+
+For each registered scheme, check that the analytic `wire_bits(n)` matches
+the bits actually needed to describe the roundtrip output:
+
+  * level-grid schemes — the output values land on the advertised grid, so
+    log2(levels) bits per coordinate (+32 for the f32 scale) suffice;
+  * sign/ternary — the output alphabet really has 2 / 3 symbols;
+  * top-k / rand-k — at most k coordinates survive, and the audit charges
+    the index cost log2(C(n, k)) for naming them plus the per-value payload.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baselines as B
+
+
+def _y(seed, n):
+    return jax.random.normal(jax.random.key(seed), (n,)) ** 3
+
+
+def _grid_positions(y_hat, scale, levels):
+    """Quantizer level index of each output value on the [-scale, scale]
+    uniform grid; valid iff every position is a near-integer in range."""
+    delta = 2.0 / levels
+    pos = (np.asarray(y_hat) / np.asarray(scale) + 1.0 - delta / 2.0) / delta
+    return pos
+
+
+@given(levels=st.sampled_from([4, 8, 16, 64]), n=st.integers(8, 600),
+       seed=st.integers(0, 50))
+@settings(max_examples=20, deadline=None)
+def test_uniform_grid_schemes_fit_audit(levels, n, seed):
+    y = _y(seed, n)
+    scale = float(jnp.max(jnp.abs(y)))
+    # naive: midpoint grid −1 + (2i+1)Δ/2; dither: endpoint grid −1 + jΔ'
+    for comp, pos_of in (
+            (B.naive_uniform(levels),
+             lambda v: _grid_positions(v, scale, levels)),
+            (B.standard_dither(levels),
+             lambda v: (np.asarray(v) / scale + 1.0) * (levels - 1) / 2.0)):
+        y_hat = comp.roundtrip(jax.random.key(seed + 1), y)
+        pos = pos_of(y_hat)
+        assert np.all(pos > -0.5) and np.all(pos < levels - 0.5), comp.name
+        np.testing.assert_allclose(pos, np.round(pos), atol=1e-3)
+        # n grid indices + one f32 scale — exactly the audit
+        assert comp.wire_bits(n) == pytest.approx(
+            n * math.log2(levels) + 32)
+
+
+@given(s=st.sampled_from([1, 4, 15]), n=st.integers(8, 600),
+       seed=st.integers(0, 50))
+@settings(max_examples=20, deadline=None)
+def test_qsgd_levels_fit_audit(s, n, seed):
+    """QSGD output is sign · (ℓ/s) · ‖y‖₂ with ℓ ∈ {0..s}: 1 sign bit +
+    log2(s+1) level bits per coordinate + 32 for the norm."""
+    y = _y(seed, n)
+    comp = B.qsgd(s)
+    y_hat = comp.roundtrip(jax.random.key(seed + 1), y)
+    norm = float(jnp.linalg.norm(y))
+    lev = np.abs(np.asarray(y_hat)) / norm * s
+    np.testing.assert_allclose(lev, np.round(lev), atol=1e-3)
+    assert np.all(lev <= s + 0.5)
+    assert comp.wire_bits(n) == pytest.approx(
+        n * (1 + math.log2(s + 1)) + 32)
+
+
+@given(n=st.integers(8, 600), seed=st.integers(0, 50))
+@settings(max_examples=15, deadline=None)
+def test_sign_and_ternary_alphabets(n, seed):
+    y = _y(seed, n)
+    comp = B.sign_compressor()
+    y_hat = np.asarray(comp.roundtrip(jax.random.key(0), y))
+    assert len(np.unique(np.round(y_hat, 6))) <= 2
+    assert comp.wire_bits(n) == n + 32
+
+    tern = B.ternary()
+    t_hat = np.asarray(tern.roundtrip(jax.random.key(seed + 1), y))
+    assert len(np.unique(np.round(t_hat, 6))) <= 3
+    assert tern.wire_bits(n) == pytest.approx(n * math.log2(3) + 32)
+
+
+@given(kf=st.sampled_from([0.05, 0.125, 0.5]), n=st.integers(16, 600),
+       seed=st.integers(0, 50),
+       quant=st.sampled_from([None, 16, 256]))
+@settings(max_examples=25, deadline=None)
+def test_topk_randk_sparsity_and_index_cost(kf, n, seed, quant):
+    """Sparsifiers: ≤ k survivors; the audit charges k payload values plus
+    the log2(C(n,k)) bits needed to name the surviving index set."""
+    y = _y(seed, n)
+    k = max(1, int(round(kf * n)))
+    payload = 32 if quant is None else math.log2(quant)
+    expect = k * payload + math.log2(math.comb(n, k)) + 32
+    for comp in (B.topk(kf, quant), B.randk(kf, quant)):
+        y_hat = np.asarray(comp.roundtrip(jax.random.key(seed + 1), y))
+        nnz = int(np.sum(y_hat != 0.0))
+        assert nnz <= k + 1, comp.name      # +1: magnitude ties at the cut
+        assert comp.wire_bits(n) == pytest.approx(expect), comp.name
+    # the index cost is real: audit must exceed the pure-payload cost
+    assert B.topk(kf, quant).wire_bits(n) > k * payload
+
+
+def test_randk_unbiased_rescale_uses_realized_keep_rate():
+    """unbiased=True must divide by the EXACT keep probability k/n of the
+    fixed-size mask, not the requested fraction k was rounded from."""
+    n = 30
+    y = jnp.ones((n,))
+    comp = B.randk(0.05, unbiased=True)          # k = round(1.5) = 2, not n/20
+    keys = jax.random.split(jax.random.key(0), 4000)
+    mean = jnp.mean(jax.vmap(lambda k: comp.roundtrip(k, y))(keys), axis=0)
+    np.testing.assert_allclose(np.asarray(mean), 1.0, atol=0.15)
+
+
+def test_index_cost_grows_with_n_at_fixed_k():
+    """Naming k survivors out of n costs more bits as n grows — the audit
+    must reflect the log2(C(n,k)) term, not just k payload values."""
+    b1 = B.topk(0.5, 256).wire_bits(64)      # k = 32 of 64
+    k = 32
+    b2 = B.topk(k / 1024, 256).wire_bits(1024)   # k = 32 of 1024
+    assert b2 > b1
+    assert b2 - b1 == pytest.approx(
+        math.log2(math.comb(1024, 32)) - math.log2(math.comb(64, 32)))
+
+
+def test_quantized_topk_values_on_grid():
+    y = _y(3, 128)
+    comp = B.topk(0.25, quant_levels=16)
+    y_hat = np.asarray(comp.roundtrip(jax.random.key(0), y))
+    kept = y_hat[y_hat != 0.0]
+    # top-k keeps the max coordinate, so the quantizer scale is max|y|
+    scale = float(jnp.max(jnp.abs(y)))
+    pos = _grid_positions(kept, scale, 16)
+    np.testing.assert_allclose(pos, np.round(pos), atol=1e-3)

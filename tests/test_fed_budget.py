@@ -1,0 +1,182 @@
+"""Budget allocation policies + the compressor registry's budget mapping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.fed import budget, registry
+from repro.fed.registry import gradcomp_config_for_budget
+
+
+# ---------------------------------------------------------------------------
+# allocation policies
+# ---------------------------------------------------------------------------
+@given(avg=st.floats(0.2, 7.5), m=st.integers(2, 12),
+       seed=st.integers(0, 50))
+@settings(max_examples=20, deadline=None)
+def test_policies_conserve_total(avg, m, seed):
+    total = avg * m
+    norms = np.abs(np.random.default_rng(seed).standard_normal(m)) + 0.01
+    for policy in budget.POLICIES:
+        rates = budget.allocate(policy, total, m, norms=norms,
+                                min_rate=0.125, max_rate=8.0)
+        assert rates.shape == (m,)
+        assert rates.sum() == pytest.approx(total, rel=1e-6)
+        assert (rates >= 0.125 - 1e-9).all()
+        assert (rates <= 8.0 + 1e-9).all()
+
+
+def test_uniform_is_flat():
+    rates = budget.allocate("uniform", 8.0, 4)
+    np.testing.assert_allclose(rates, 2.0)
+
+
+def test_norm_proportional_orders_with_norms():
+    rates = budget.allocate("norm_proportional", 8.0, 4,
+                            norms=[1.0, 2.0, 4.0, 8.0])
+    assert (np.diff(rates) > 0).all()
+
+
+def test_waterfill_beats_uniform_distortion():
+    """Water-filling minimizes Σ n_i²·4^{−R_i}: strictly better than uniform
+    whenever the norms are heterogeneous."""
+    norms = np.array([0.1, 1.0, 3.0, 10.0])
+    total, m = 8.0, 4
+    uni = budget.allocate("uniform", total, m)
+    wf = budget.allocate("waterfill", total, m, norms=norms)
+    prop = budget.allocate("norm_proportional", total, m, norms=norms)
+    d_uni = budget.expected_distortion(norms, uni)
+    d_wf = budget.expected_distortion(norms, wf)
+    assert d_wf < 0.5 * d_uni
+    assert d_wf <= budget.expected_distortion(norms, prop) + 1e-12
+
+
+def test_waterfill_equalizes_marginals():
+    """At the optimum the marginals n_i²·4^{−R_i} agree for every client
+    strictly inside the [min, max] bounds."""
+    norms = np.array([0.5, 1.0, 2.0, 4.0])
+    rates = budget.allocate("waterfill", 10.0, 4, norms=norms)
+    marg = norms ** 2 * 4.0 ** (-rates)
+    interior = (rates > 0.125 + 1e-6) & (rates < 8.0 - 1e-6)
+    assert interior.sum() >= 2
+    mi = marg[interior]
+    assert mi.max() / mi.min() < 1.1
+
+
+def test_allocate_validation():
+    with pytest.raises(ValueError):
+        budget.allocate("bogus", 4.0, 4)
+    with pytest.raises(ValueError):
+        budget.allocate("uniform", 100.0, 2, max_rate=8.0)   # infeasible
+    with pytest.raises(ValueError):
+        budget.allocate("waterfill", 4.0, 4)                 # norms missing
+
+
+def test_waterfill_respects_bounds_off_lattice():
+    """min_rate not a multiple of the greedy quantum: rates must still stay
+    inside [min, max] with the total conserved (increments are clamped)."""
+    rates = budget.allocate("waterfill", 15.9, 2, norms=[10.0, 1.0],
+                            min_rate=0.07, max_rate=8.0)
+    assert rates.sum() == pytest.approx(15.9, abs=1e-6)
+    assert (rates <= 8.0 + 1e-9).all()
+    assert (rates >= 0.07 - 1e-9).all()
+
+
+def test_split_leaf_budgets_conserves_bits():
+    tree = {"w": jnp.zeros((64, 8)), "b": jnp.zeros((32,))}
+    sizes = np.array([32.0, 512.0])      # flatten order: b, w
+    norms = [0.1, 5.0]
+    rates = budget.split_leaf_budgets(tree, 2.0, norms=norms)
+    total = (np.asarray(rates) * sizes).sum()
+    assert total == pytest.approx(2.0 * sizes.sum(), rel=1e-3)
+    assert rates[1] > rates[0]           # the high-norm leaf gets more
+    with pytest.raises(ValueError):      # rate below the per-leaf floor
+        budget.split_leaf_budgets(tree, 0.1, norms=norms, min_rate=0.125)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_lists_all_conventions():
+    names = registry.available()
+    for required in ("identity", "ndsc", "dsc", "sign", "qsgd", "topk",
+                     "randk", "ternary", "naive", "dither"):
+        assert required in names
+    with pytest.raises(ValueError):
+        registry.make("nope")
+
+
+@given(b=st.floats(0.1, 8.0))
+@settings(max_examples=25, deadline=None)
+def test_budget_maps_to_effective_bits(b):
+    """GradCompConfig.effective_bits is the audit unit: the mapped config
+    realizes the requested budget exactly."""
+    cfg = gradcomp_config_for_budget(b, chunk=64)
+    assert cfg.effective_bits == pytest.approx(b)
+    assert cfg.exact_keep or cfg.keep_fraction == 1.0
+
+
+def test_roundtrip_all_backends():
+    """Every registered compressor encodes+decodes a tree back to its
+    structure with finite error and a positive bit audit."""
+    tree = {"w": jax.random.normal(jax.random.key(0), (20, 7)),
+            "b": jax.random.normal(jax.random.key(1), (33,))}
+    key = jax.random.key(2)
+    for name in registry.available():
+        codec = registry.make(name, budget=4.0)
+        meta = codec.meta(tree)
+        wire, bits = codec.compress(key, tree, round_idx=1)
+        out = codec.decode(wire, meta)
+        assert jax.tree.structure(out) == jax.tree.structure(tree), name
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            assert a.shape == b.shape
+            assert bool(jnp.isfinite(b).all())
+        assert bits > 0, name
+        assert codec.wire_bytes(wire, meta) > 0, name
+
+
+def test_ndsc_per_leaf_budgets():
+    tree = {"w": jnp.ones((64, 4)), "b": jnp.ones((40,))}
+    leaf_budgets = [1.0, 4.0]            # flatten order: b, w
+    codec = registry.make("ndsc", budget=leaf_budgets, chunk=32)
+    meta = codec.meta(tree)
+    wire = codec.encode(jax.random.key(0), tree)
+    out = codec.decode(wire, meta)
+    assert out["w"].shape == (64, 4)
+    cfg_b, cfg_w = meta.extra
+    assert cfg_b.effective_bits == pytest.approx(1.0)
+    assert cfg_w.effective_bits == pytest.approx(4.0)
+    with pytest.raises(ValueError):
+        registry.make("ndsc", budget=[1.0], chunk=32).meta(tree)
+
+
+def test_ndsc_realized_equals_analytic_bytes():
+    tree = {"w": jax.random.normal(jax.random.key(0), (100,))}
+    for b in (0.25, 1.0, 3.0, 8.0):
+        codec = registry.make("ndsc", budget=b, chunk=32)
+        meta = codec.meta(tree)
+        wire = codec.encode(jax.random.key(1), tree, round_idx=2)
+        assert codec.wire_bytes(wire, meta) == codec.wire_bits(tree) / 8.0
+
+
+def test_dsc_sublinear_realized_bytes_sane():
+    """Sub-linear dsc payloads carry a Bernoulli keep mask: the realized
+    bytes track the analytic audit (same units, binomial fluctuation)."""
+    tree = {"w": jax.random.normal(jax.random.key(0), (200,))}
+    codec = registry.make("dsc", budget=0.5)
+    meta = codec.meta(tree)
+    wire = codec.encode(jax.random.key(1), tree)
+    real = codec.wire_bytes(wire, meta)
+    analytic = codec.wire_bits(tree) / 8.0
+    assert 0.4 * analytic < real < 2.5 * analytic
+
+
+def test_identity_codec_is_exact():
+    tree = {"w": jax.random.normal(jax.random.key(0), (11, 3))}
+    codec = registry.make("identity")
+    meta = codec.meta(tree)
+    out = codec.decode(codec.encode(jax.random.key(1), tree), meta)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(tree["w"]))
+    assert codec.wire_bits(tree) == 32 * 33

@@ -136,6 +136,60 @@ def test_strategy_validation():
         G.GradCompConfig(chunk=100)
 
 
+@given(keep=st.sampled_from([0.25, 0.4, 0.5, 0.75]),
+       n=st.integers(100, 3000), seed=st.integers(0, 100))
+@settings(max_examples=15, deadline=None)
+def test_exact_keep_deterministic_count_and_audit(keep, n, seed):
+    """exact_keep: the realized kept-chunk count is deterministic and the
+    realized bytes-on-wire equal the analytic audit exactly, every round."""
+    cfg = G.GradCompConfig(bits=2, chunk=64, keep_fraction=keep,
+                           exact_keep=True)
+    x = jax.random.normal(jax.random.key(seed), (n,))
+    c = -(-n // 64)
+    tree = {"x": x}
+    for r in (0, 1, 7):
+        payloads, _ = G.compress_tree(tree, cfg, round_idx=r)
+        assert int(payloads["x"]["mask"].sum()) == cfg.kept_chunks(c)
+        assert (G.wire_bytes_payload(payloads, cfg)
+                == G.wire_bytes_tree(tree, cfg)["payload_bytes"])
+
+
+def test_exact_keep_roundtrip_decodes():
+    cfg = G.GradCompConfig(bits=4, chunk=64, keep_fraction=0.5,
+                           exact_keep=True)
+    tree = {"x": jax.random.normal(jax.random.key(0), (400,))}
+    payloads, meta = G.compress_tree(tree, cfg)
+    out = G.decode_payload(payloads, meta, cfg)
+    assert out["x"].shape == (400,)
+    # kept chunks decode to something, dropped chunks to zero
+    assert float(jnp.linalg.norm(out["x"])) > 0
+
+
+def test_keep_mask_drawn_at_logical_chunks():
+    """ROADMAP item: the ZeRO-1 owned layout (chunk count padded to a
+    multiple of m) must produce the SAME payload as the un-padded all-gather
+    encode on the real chunks when the keep mask / dither are in play —
+    the mask is drawn at the pre-pad chunk count in both paths."""
+    from repro.dist import zero as zero_lib
+    x = jax.random.normal(jax.random.key(1), (500,))
+    c = -(-500 // 64)                                   # 8 logical chunks
+    for kwargs in ({"keep_fraction": 0.5},
+                   {"keep_fraction": 0.5, "exact_keep": True},
+                   {"dithered": True, "error_feedback": False},
+                   {"dithered": True, "error_feedback": False,
+                    "keep_fraction": 0.3}):
+        cfg = G.GradCompConfig(bits=2, chunk=64, **kwargs)
+        direct = G.encode_leaf(x, 3, cfg, round_idx=5)
+        u = zero_lib.to_owned(x, 64, 3)                 # pads 8 → 9 chunks
+        assert u.shape[0] != c                          # padding is real
+        padded = G.encode_leaf(u, 3, cfg, round_idx=5, logical_chunks=c)
+        for k in direct:
+            np.testing.assert_array_equal(np.asarray(direct[k]),
+                                          np.asarray(padded[k][:c]), err_msg=k)
+        if "mask" in padded:
+            assert not np.asarray(padded["mask"][c:]).any()
+
+
 @given(bits=st.sampled_from([1, 2]),
        keep=st.sampled_from([0.25, 0.5, 0.75]),
        n=st.integers(100, 5000))

@@ -38,7 +38,9 @@ def test_owned_reconstruction_roundtrip():
 @pytest.mark.slow
 def test_multiworker_equivalence_subprocess():
     """m=4 data shards: ZeRO-1 all-to-all schedule must produce EXACTLY the
-    same updated parameters as the paper-faithful all-gather consensus."""
+    same updated parameters as the paper-faithful all-gather consensus —
+    including the sub-linear keep_fraction < 1 regime, where the chunk
+    keep-mask is drawn at the pre-pad chunk count in both paths."""
     script = textwrap.dedent("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -55,31 +57,37 @@ def test_multiworker_equivalence_subprocess():
         cfg = configs.get_reduced("phi3-mini-3.8b")
         opt = sgd(1.0)
         batch = batch_for_shape(cfg, 8, 32)
-        gc_z = GradCompConfig(bits=8, chunk=256, strategy="alltoall_zero1")
-        zstep = step_lib.make_zero_train_step(cfg, opt, gc_z, mesh)
-        state = step_lib.init_zero_state(cfg, opt, gc_z, mesh)
-        o1, _, _, mz = zstep(*state, batch)
-        gc_a = GradCompConfig(bits=8, chunk=256,
-                              strategy="allgather_packed")
-        tstep = step_lib.make_train_step(cfg, opt, gc_a, mesh)
-        st2 = step_lib.init_train_state(cfg, opt, gc_a, mesh)
-        p1, _, _, mr = tstep(*st2, batch)
-        assert abs(float(mz["loss"]) - float(mr["loss"])) < 1e-6
-        pmeta = zero_lib.params_meta(jax.eval_shape(lambda: p1), gc_z, 4)
-        treedef, infos = pmeta
-        flat_owned = treedef.flatten_up_to(
-            jax.tree.map(lambda x: np.asarray(x), o1))
-        recon = [x.reshape(-1)[:i[0]].reshape(i[1])
-                 for x, i in zip(flat_owned, infos)]
-        flat_ref = [np.asarray(x) for x in jax.tree.leaves(p1)]
-        err = max(float(np.max(np.abs(a - b)))
-                  for a, b in zip(recon, flat_ref))
-        assert err < 1e-5, err
-        print("EXACT", err)
+
+        def run_pair(tag, **gc_kwargs):
+            gc_z = GradCompConfig(strategy="alltoall_zero1", **gc_kwargs)
+            zstep = step_lib.make_zero_train_step(cfg, opt, gc_z, mesh)
+            state = step_lib.init_zero_state(cfg, opt, gc_z, mesh)
+            o1, _, _, mz = zstep(*state, batch)
+            gc_a = GradCompConfig(strategy="allgather_packed", **gc_kwargs)
+            tstep = step_lib.make_train_step(cfg, opt, gc_a, mesh)
+            st2 = step_lib.init_train_state(cfg, opt, gc_a, mesh)
+            p1, _, _, mr = tstep(*st2, batch)
+            assert abs(float(mz["loss"]) - float(mr["loss"])) < 1e-6
+            pmeta = zero_lib.params_meta(jax.eval_shape(lambda: p1), gc_z, 4)
+            treedef, infos = pmeta
+            flat_owned = treedef.flatten_up_to(
+                jax.tree.map(lambda x: np.asarray(x), o1))
+            recon = [x.reshape(-1)[:i[0]].reshape(i[1])
+                     for x, i in zip(flat_owned, infos)]
+            flat_ref = [np.asarray(x) for x in jax.tree.leaves(p1)]
+            err = max(float(np.max(np.abs(a - b)))
+                      for a, b in zip(recon, flat_ref))
+            assert err < 1e-5, (tag, err)
+            print("EXACT", tag, err)
+
+        run_pair("dense", bits=8, chunk=256)
+        run_pair("sublinear", bits=8, chunk=256, keep_fraction=0.5)
+        run_pair("sublinear_exact", bits=8, chunk=256, keep_fraction=0.5,
+                 exact_keep=True)
     """) % os.path.join(os.path.dirname(__file__), "..", "src")
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
     out = subprocess.run([sys.executable, "-c", script], env=env,
                          capture_output=True, text=True, timeout=900)
     assert out.returncode == 0, out.stderr[-2000:]
-    assert "EXACT" in out.stdout
+    assert out.stdout.count("EXACT") == 3
