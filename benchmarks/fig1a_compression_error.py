@@ -15,7 +15,6 @@ from benchmarks.common import (gaussian_cubed, make_codec, normalized_error,
                                print_table)
 from repro.core import baselines as B
 from repro.core.coding import compress_in_embedded_space
-from repro.core.embeddings import EmbeddingSpec
 from repro.core import frames as F
 from repro.core import quantizers as q
 

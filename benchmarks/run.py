@@ -2,6 +2,14 @@
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run fig1b fig2 # subset
+  PYTHONPATH=src python -m benchmarks.run fed table1 fig1c --tiny \
+      --json BENCH_smoke.json                        # CI smoke lane
+
+Each benchmark module is imported lazily when selected, so one broken module
+can't kill the whole runner; failures are reported per benchmark and the run
+continues (nonzero exit at the end if anything failed). `--tiny` substitutes
+CPU-tiny kwargs for the CI smoke lane; `--json` writes per-benchmark
+wall-time + the headline result for the perf-trajectory artifact.
 
 The multi-pod dry-run / §Roofline table is produced separately by
 `python -m repro.launch.dryrun --sweep` (it needs a 512-device process) and
@@ -9,37 +17,119 @@ formatted by benchmarks.roofline.
 """
 from __future__ import annotations
 
+import argparse
+import importlib
+import json
 import sys
 import time
+import traceback
 
-from benchmarks import (appJ_frames, appN_aspect_ratio,
-                        fed_heterogeneous, fig1a_compression_error,
-                        fig1b_dgddef_rate, fig1c_timing, fig1d_sparsified_gd,
-                        fig2_svm, fig3_multiworker, lemma4_covering,
-                        modelscale_ablation, table1_compressors)
-
+# benchmark name -> module under benchmarks/ exposing run(**kwargs)
 ALL = {
-    "fed": fed_heterogeneous.run,
-    "table1": table1_compressors.run,
-    "fig1a": fig1a_compression_error.run,
-    "fig1b": fig1b_dgddef_rate.run,
-    "fig1c": fig1c_timing.run,
-    "fig1d": fig1d_sparsified_gd.run,
-    "fig2": fig2_svm.run,
-    "fig3": fig3_multiworker.run,
-    "appJ": appJ_frames.run,
-    "appN": appN_aspect_ratio.run,
-    "lemma4": lemma4_covering.run,
-    "modelscale": modelscale_ablation.run,
+    "fed": "fed_heterogeneous",
+    "fed_cohort": "fed_cohort_scaling",
+    "table1": "table1_compressors",
+    "fig1a": "fig1a_compression_error",
+    "fig1b": "fig1b_dgddef_rate",
+    "fig1c": "fig1c_timing",
+    "fig1d": "fig1d_sparsified_gd",
+    "fig2": "fig2_svm",
+    "fig3": "fig3_multiworker",
+    "appJ": "appJ_frames",
+    "appN": "appN_aspect_ratio",
+    "lemma4": "lemma4_covering",
+    "modelscale": "modelscale_ablation",
+}
+
+# --tiny kwargs: small enough for the CI smoke lane, large enough that each
+# benchmark's internal assertions still hold
+TINY = {
+    "fed": dict(m=6, dim=96, rounds=30, chunk=32),
+    "fed_cohort": dict(m_values=(8, 32), dim=48, per_client=16, rounds=3,
+                       adaptive_m=8, adaptive_rounds=25),
+    "table1": dict(n=256, trials=5),
+    "fig1c": dict(dims=(128, 256, 512)),
 }
 
 
+def _jsonable(obj, depth: int = 0):
+    """Best-effort conversion of a benchmark's return value to JSON."""
+    if depth > 4:
+        return str(obj)
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v, depth + 1) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v, depth + 1) for v in obj[:50]]
+    if hasattr(obj, "item") and getattr(obj, "ndim", None) == 0:
+        return obj.item()                       # numpy scalar
+    if hasattr(obj, "tolist"):
+        return _jsonable(obj.tolist(), depth + 1)
+    return str(obj)
+
+
+def run_one(name: str, tiny: bool = False) -> dict:
+    """Import + run one benchmark; never raises — failures land in the
+    record (`ok`/`error`) so the rest of the run proceeds."""
+    rec = {"name": name, "ok": False, "seconds": None, "headline": None,
+           "error": None}
+    t0 = time.time()
+    try:
+        mod = importlib.import_module(f"benchmarks.{ALL[name]}")
+        kwargs = TINY.get(name, {}) if tiny else {}
+        rec["headline"] = _jsonable(mod.run(**kwargs))
+        rec["ok"] = True
+    except Exception:
+        rec["error"] = traceback.format_exc(limit=8)
+    rec["seconds"] = round(time.time() - t0, 3)
+    return rec
+
+
 def main(argv=None) -> None:
-    names = (argv or sys.argv[1:]) or list(ALL)
+    parser = argparse.ArgumentParser(
+        prog="benchmarks.run", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    parser.add_argument("names", nargs="*", default=[], metavar="name",
+                        help=f"benchmarks to run (default: all) from "
+                             f"{', '.join(ALL)}")
+    parser.add_argument("--tiny", action="store_true",
+                        help="CPU-tiny sizes for the CI smoke lane")
+    parser.add_argument("--json", metavar="PATH", default=None,
+                        help="write per-benchmark wall-time + headline "
+                             "metric to PATH")
+    args = parser.parse_args(argv)
+    unknown = [n for n in args.names if n not in ALL]
+    if unknown:
+        parser.error(f"unknown benchmark(s) {', '.join(unknown)}; "
+                     f"choose from {', '.join(ALL)}")
+    names = args.names or list(ALL)
+
+    records = []
     for name in names:
-        t0 = time.time()
-        ALL[name]()
-        print(f"[{name} done in {time.time()-t0:.1f}s]")
+        rec = run_one(name, tiny=args.tiny)
+        records.append(rec)
+        if rec["ok"]:
+            print(f"[{name} done in {rec['seconds']:.1f}s]")
+        else:
+            print(f"[{name} FAILED after {rec['seconds']:.1f}s]\n"
+                  f"{rec['error']}", file=sys.stderr)
+
+    failed = [r["name"] for r in records if not r["ok"]]
+    if args.json:
+        payload = {
+            "tiny": args.tiny,
+            "total_seconds": round(sum(r["seconds"] for r in records), 3),
+            "failed": failed,
+            "benchmarks": records,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"[wrote {args.json}]")
+    if failed:
+        print(f"[{len(failed)}/{len(records)} benchmarks failed: "
+              f"{', '.join(failed)}]", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -7,7 +7,6 @@ wire-bit budget, at a matched R≈4 bits/dim where the scheme allows it.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import (gaussian_cubed, make_codec, normalized_error,
                                print_table, timed)

@@ -16,7 +16,6 @@ import jax.numpy as jnp
 
 from repro.core import frames, optim
 from repro.core.coding import Codec, CodecConfig
-from repro.core import baselines
 
 
 def main():
@@ -55,7 +54,7 @@ def main():
         grad, jnp.zeros(d), levels=4, alpha=alpha, steps=150,
         L=float(eigs[-1]), mu=float(eigs[0]),
         D=float(jnp.linalg.norm(x_star)) * 1.5, n=d, x_star=x_star)
-    print(f"\nleast squares, R=2 bits/dim, 150 steps:")
+    print("\nleast squares, R=2 bits/dim, 150 steps:")
     print(f"  DGD-DEF   ‖x_T − x*‖ = {float(t_def.dist_history[-1]):.2e}")
     print(f"  DQGD [6]  ‖x_T − x*‖ = {float(t_naive.dist_history[-1]):.2e}")
 

@@ -15,7 +15,6 @@ Frames are immutable pytrees so they can be closed over / passed through jit.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Union
 
 import jax

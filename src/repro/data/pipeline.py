@@ -14,11 +14,10 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Iterator, Optional
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 # ---------------------------------------------------------------------------

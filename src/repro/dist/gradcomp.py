@@ -26,7 +26,6 @@ Wire format per leaf (the payload dict):
 from __future__ import annotations
 
 import dataclasses
-import math
 
 import jax
 import jax.numpy as jnp

@@ -37,7 +37,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 from repro.dist import gradcomp as G
 from repro.dist import zero as zero_lib
-from repro.dist.sharding import batch_specs, data_axes_for, param_specs
+from repro.dist.sharding import data_axes_for, param_specs
 from repro.models import decode as decode_lib
 from repro.models import model as model_lib
 from repro.optimizer.optim import (apply_updates, clip_by_global_norm,

@@ -15,7 +15,6 @@ replicated `allgather_packed` path (tests/test_zero.py asserts this at m=4).
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

@@ -3,6 +3,9 @@
 The paper's NDSC codec under its harshest setting: per-client bit budgets
 R_i, partial participation, stragglers, error feedback on params-deltas, and
 a per-round wire-bytes ledger that matches the analytic audit to the byte.
+Large-m simulations run cohort-vectorized: clients sharing a
+(codec spec, client config, data signature) execute as one vmapped program,
+and budgets can re-allocate adaptively from the server-side delta-norm EMA.
 
     from repro.fed import (Federation, FedConfig, ClientConfig, ServerConfig,
                            registry, budget)
@@ -12,17 +15,24 @@ a per-round wire-bytes ledger that matches the analytic audit to the byte.
     history = fed.run(FedConfig(num_rounds=50), eval_fn=global_loss)
 """
 from repro.fed import budget, registry
-from repro.fed.clients import (ClientConfig, ClientState, init_client_state,
-                               local_sgd, make_client_round,
-                               make_cohort_round)
-from repro.fed.registry import TreeCodec, available, make
-from repro.fed.rounds import FedConfig, Federation
+from repro.fed.budget import AdaptiveConfig, NormEMA
+from repro.fed.clients import (ClientConfig, ClientState, data_signature,
+                               init_client_state, local_sgd,
+                               make_client_round, make_cohort_round,
+                               stack_trees, unstack_tree)
+from repro.fed.registry import TreeCodec, available, codec_spec, make
+from repro.fed.rounds import (FedConfig, Federation, cohort_key,
+                              partition_cohorts)
 from repro.fed.server import (AGGREGATORS, ServerConfig, ServerState,
-                              aggregate, decode_deltas, init_server)
+                              aggregate, decode_deltas, delta_norms,
+                              init_server)
 
 __all__ = [
-    "AGGREGATORS", "ClientConfig", "ClientState", "FedConfig", "Federation",
-    "ServerConfig", "ServerState", "TreeCodec", "aggregate", "available",
-    "budget", "decode_deltas", "init_client_state", "init_server",
-    "local_sgd", "make", "make_client_round", "make_cohort_round", "registry",
+    "AGGREGATORS", "AdaptiveConfig", "ClientConfig", "ClientState",
+    "FedConfig", "Federation", "NormEMA", "ServerConfig", "ServerState",
+    "TreeCodec", "aggregate", "available", "budget", "codec_spec",
+    "cohort_key", "data_signature", "decode_deltas", "delta_norms",
+    "init_client_state", "init_server", "local_sgd", "make",
+    "make_client_round", "make_cohort_round", "partition_cohorts", "registry",
+    "stack_trees", "unstack_tree",
 ]

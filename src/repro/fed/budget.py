@@ -26,6 +26,8 @@ pytree leaves (cost of a bit differs per leaf: size_l bits buy 1 bit/dim).
 """
 from __future__ import annotations
 
+import dataclasses
+import math
 from typing import Optional, Sequence
 
 import jax
@@ -115,6 +117,117 @@ def _waterfill(total: float, norms: np.ndarray, lo: float,
         marginal[i] *= 4.0 ** (-step)
         capped[i] = rates[i] >= hi - 1e-12
     return rates
+
+
+# ---------------------------------------------------------------------------
+# Adaptive re-allocation — track the CURRENT gradient geometry, not x₀'s
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AdaptiveConfig:
+    """Re-run the allocator every `realloc_every` rounds from the server-side
+    EMA of decoded delta norms (no extra communication — the server already
+    decodes every payload).
+
+    `grid` snaps the re-allocated rates to a lattice and `hysteresis` keeps
+    the previous allocation unless some client's rate moved by at least that
+    much — together they stop cohort keys (and hence compiled vmapped
+    programs) churning every re-allocation while the geometry drifts slowly.
+    """
+
+    total_rate: float
+    policy: str = "waterfill"
+    realloc_every: int = 10
+    ema_beta: float = 0.6        # n ← β·n + (1−β)·‖Δ̂‖ per participated round
+    hysteresis: float = 0.25     # adopt only if max_i |new_i − cur_i| ≥ this
+    grid: float = 0.25           # rate lattice (re-allocated R_i are multiples)
+    min_rate: float = 0.25
+    max_rate: float = 8.0
+
+    def __post_init__(self):
+        if self.realloc_every < 1:
+            raise ValueError("realloc_every must be ≥ 1")
+        if self.grid <= 0.0:
+            raise ValueError("grid must be positive")
+        if not 0.0 <= self.ema_beta < 1.0:
+            raise ValueError("ema_beta must be in [0, 1)")
+
+
+class NormEMA:
+    """Host-side EMA of per-client decoded delta norms ‖Δ̂_i‖.
+
+    Clients that never participated yet fall back to the mean of the seen
+    ones (or 1.0 before any round), so the allocator always gets a full norm
+    vector. The first observation initializes the lane (no zero-bias)."""
+
+    def __init__(self, num_clients: int, beta: float = 0.6):
+        self.beta = beta
+        self.norms = np.zeros(num_clients, dtype=np.float64)
+        self.seen = np.zeros(num_clients, dtype=bool)
+
+    def update(self, ids: Sequence[int], norms: Sequence[float]) -> None:
+        for i, n in zip(ids, norms):
+            n = float(n)
+            self.norms[i] = (self.beta * self.norms[i] + (1.0 - self.beta) * n
+                             if self.seen[i] else n)
+            self.seen[i] = True
+
+    def snapshot(self) -> np.ndarray:
+        out = self.norms.copy()
+        fill = float(out[self.seen].mean()) if self.seen.any() else 1.0
+        out[~self.seen] = fill
+        return np.maximum(out, 1e-30)
+
+
+def quantize_rates(rates: Sequence[float], grid: float, total: float,
+                   min_rate: float, max_rate: float) -> np.ndarray:
+    """Snap rates to the `grid` lattice, conserving Σ R_i to within grid/2.
+
+    Floor-snap each rate to the lattice (clipped into the feasible lattice
+    band), then hand out the remaining whole grid steps by largest fractional
+    remainder — deterministic, and every output is a lattice point so equal
+    allocations compare exactly across re-allocations (stable cohort keys).
+    """
+    rates = np.asarray(rates, dtype=np.float64)
+    lo = math.ceil(min_rate / grid - 1e-9) * grid
+    hi = math.floor(max_rate / grid + 1e-9) * grid
+    if lo > hi:
+        raise ValueError(f"no lattice point of grid={grid} inside "
+                         f"[{min_rate}, {max_rate}]")
+    base = np.clip(np.floor(rates / grid + 1e-9), lo / grid, hi / grid)
+    units = int(round(total / grid)) - int(base.sum())
+    frac = rates / grid - base
+    order = np.argsort(-frac, kind="stable")
+    step = 1 if units > 0 else -1
+    bound = hi / grid if units > 0 else lo / grid
+    for _ in range(abs(units)):
+        movable = [i for i in (order if units > 0 else order[::-1])
+                   if base[i] * step < bound * step]
+        if not movable:
+            break
+        i = movable[0]
+        base[i] += step
+        frac[i] -= step
+        order = np.argsort(-frac, kind="stable")
+    return base * grid
+
+
+def reallocate(cfg: AdaptiveConfig, ema: NormEMA,
+               current: Sequence[float]) -> tuple[np.ndarray, bool]:
+    """One adaptive step: (rates to use next, whether they changed).
+
+    Runs `allocate(cfg.policy)` on the EMA norms, snaps to the lattice, and
+    applies the hysteresis guard: the current allocation is kept unless some
+    client's snapped rate moved by ≥ cfg.hysteresis.
+    """
+    current = np.asarray(current, dtype=np.float64)
+    raw = allocate(cfg.policy, cfg.total_rate, current.shape[0],
+                   norms=ema.snapshot(), min_rate=cfg.min_rate,
+                   max_rate=cfg.max_rate)
+    new = quantize_rates(raw, cfg.grid, cfg.total_rate,
+                         cfg.min_rate, cfg.max_rate)
+    if float(np.max(np.abs(new - current))) < cfg.hysteresis:
+        return current, False
+    return new, True
 
 
 def split_leaf_budgets(tree, rate: float,

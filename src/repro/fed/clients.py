@@ -123,3 +123,28 @@ def make_cohort_round(loss_fn: Callable, codec, cfg: ClientConfig,
     server decodes every lane with the same frames."""
     fn = _round_body(loss_fn, codec, cfg, codec.meta(params_template))
     return jax.jit(jax.vmap(fn, in_axes=(None, 0, 0, None)))
+
+
+# ---------------------------------------------------------------------------
+# Cohort stacking — between the per-client host lists and the vmap lanes
+# ---------------------------------------------------------------------------
+def stack_trees(trees):
+    """Stack a list of identically-shaped pytrees along a new leading axis.
+
+    Works on `ClientState` (NamedTuple pytree: PRNG keys stack into a key
+    array, each lane keeps its own stream) and on client data shards alike.
+    """
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def unstack_tree(tree, m: int) -> list:
+    """Inverse of `stack_trees`: lane i of every leaf, as m pytrees."""
+    return [jax.tree.map(lambda a, i=i: a[i], tree) for i in range(m)]
+
+
+def data_signature(data) -> tuple:
+    """Hashable (treedef, leaf shapes/dtypes) — cohort lanes must agree on it
+    for `stack_trees` to produce one rectangular batch."""
+    leaves, treedef = jax.tree.flatten(data)
+    return treedef, tuple((tuple(x.shape), jnp.result_type(x).name)
+                          for x in leaves)

@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -63,6 +63,9 @@ class TreeCodec:
     wire_bytes: Callable  # (wire, meta) -> float — realized ledger entry
     rate: Optional[float] = None   # effective bits/dim when well-defined
     sim_only: bool = False         # True: `wire` is the decoded tree itself
+    spec: Optional[tuple] = None   # hashable identity: equal specs ⇒ the
+                                   # codecs are interchangeable (same factory,
+                                   # budget and kwargs) — the cohort-key unit
 
     def compress(self, key, tree, round_idx=0):
         """One-shot (payload, analytic bits) — the ISSUE's convenience form."""
@@ -83,12 +86,27 @@ def available() -> tuple:
     return tuple(sorted(_REGISTRY))
 
 
+def codec_spec(name: str, budget, kwargs: dict) -> tuple:
+    """The hashable identity of a `make` call.
+
+    Two codecs with equal specs encode/decode identically (factories are
+    deterministic in (name, budget, kwargs) — frames and keep-masks derive
+    from the seed, never from object identity), so `repro.fed.rounds` uses
+    the spec as its cohort key and shares one compiled vmapped program among
+    all clients whose codecs compare equal.
+    """
+    budget_key = (float(budget) if np.isscalar(budget)
+                  else tuple(float(b) for b in budget))
+    return (name, budget_key, tuple(sorted(kwargs.items())))
+
+
 def make(name: str, budget: float = 4.0, **kwargs) -> TreeCodec:
     """Instantiate a registered compressor at a bits-per-dimension budget."""
     if name not in _REGISTRY:
         raise ValueError(
             f"unknown compressor {name!r}; available: {available()}")
-    return _REGISTRY[name](budget, **kwargs)
+    codec = _REGISTRY[name](budget, **kwargs)
+    return dataclasses.replace(codec, spec=codec_spec(name, budget, kwargs))
 
 
 def _tree_meta(tree) -> tuple:

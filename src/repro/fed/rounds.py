@@ -1,20 +1,44 @@
-"""The federated round driver: participation, stragglers, wire ledger.
+"""The federated round driver: cohorts, participation, stragglers, ledger.
 
 `Federation` wires the pieces together: per-client shards + budgets →
-registry codecs → jit-compiled client rounds (compiled ONCE per distinct
-(codec, client-config) pair and reused across rounds and clients) → server
-decode + aggregate. The host loop only does participant sampling, straggler
-dropout and the ledger; all numerics run inside jit.
+registry codecs → compiled client rounds → server decode + aggregate. The
+host loop only does participant sampling, straggler dropout, cohort
+bookkeeping and the ledger; all numerics run inside jit.
+
+Cohort execution (the large-m path): participants are partitioned by the
+hashable cohort key
+
+    (codec.spec, ClientConfig, data signature)
+
+and every cohort of ≥ 2 clients runs through ONE compiled
+`make_cohort_round` program (`jax.vmap` over stacked `ClientState` / data
+pytrees, one PRNG lane per client) instead of len(cohort) sequential jit
+dispatches. Singleton cohorts — and clients whose codec has no spec (built
+outside `registry.make`) — fall back to the scalar `make_client_round` path.
+Both paths run the SAME `_round_body`, so wires, EF states and the decoded
+global delta are bit-exact between them (regression-tested); the wire ledger
+stays byte-exact because it sums the per-lane `codec.wire_bytes` audits of
+each cohort.
+
+Adaptive budget re-allocation: with `adaptive=AdaptiveConfig(...)` the driver
+re-runs `budget.allocate` every `realloc_every` rounds from the EMA of the
+decoded delta norms the server already holds (no extra communication),
+snapped to a rate lattice with a hysteresis guard so cohort keys — and hence
+compiled programs — don't churn while the gradient geometry drifts slowly.
 
 Round lifecycle (README has the diagram):
 
-  1. sample ⌈participation·m⌉ clients (deterministic per (seed, round)),
-  2. drop each sampled client as a straggler with prob. `dropout`,
-  3. surviving clients run their compiled round fn → payload + new EF state,
-  4. ledger records REALIZED payload bytes (codec.wire_bytes) and the
+  1. (adaptive only) maybe re-allocate budgets → rebuild codecs via
+     `codec_factory`, keeping every previously compiled program cached,
+  2. sample ⌈participation·m⌉ clients (deterministic per (seed, round)),
+  3. drop each sampled client as a straggler with prob. `dropout`,
+  4. partition survivors into cohorts; each cohort (vmapped) or singleton
+     (scalar) round fn → payloads + new EF states,
+  5. ledger records REALIZED payload bytes (codec.wire_bytes) and the
      analytic audit (codec.wire_bits / 8) — equal to the byte for the NDSC
      backend under exact_keep,
-  5. server decodes every payload with its client's codec and aggregates.
+  6. server decodes every payload with its client's codec, feeds the decoded
+     norms to the allocator EMA, and aggregates.
 
 Dropped/unsampled clients keep their EF memory and PRNG lane untouched —
 they never encoded, so there is nothing to feed back (straggler semantics).
@@ -27,6 +51,7 @@ from typing import Any, Callable, Optional, Sequence
 import jax
 import numpy as np
 
+from repro.fed import budget as budget_lib
 from repro.fed import clients as clients_lib
 from repro.fed import server as server_lib
 
@@ -48,28 +73,72 @@ class FedConfig:
             raise ValueError(f"unknown weighting {self.weighting!r}")
 
 
+def cohort_key(codec, client_cfg, data) -> Optional[tuple]:
+    """Hashable cohort identity, or None when the client can't be cohorted.
+
+    Clients sharing a key are interchangeable under one vmapped program:
+    equal codec specs encode/decode identically (registry contract), equal
+    `ClientConfig`s make the local loop static-identical, and equal data
+    signatures make the shards stackable into one rectangular batch.
+    """
+    spec = getattr(codec, "spec", None)
+    if spec is None:
+        return None
+    return (spec, client_cfg, clients_lib.data_signature(data))
+
+
+def partition_cohorts(ids_and_keys: Sequence) -> list:
+    """[(client_id, key-or-None), ...] → [(key, members), ...].
+
+    Members keep the input order within each cohort; cohorts appear in
+    first-seen order, with every None-keyed client as its own trailing
+    singleton. The member lists are an exact, disjoint partition of the
+    input ids (property-tested).
+    """
+    groups: dict = {}
+    order: list = []
+    singletons: list = []
+    for i, k in ids_and_keys:
+        if k is None:
+            singletons.append((None, [i]))
+            continue
+        if k not in groups:
+            groups[k] = []
+            order.append(k)
+        groups[k].append(i)
+    return [(k, groups[k]) for k in order] + singletons
+
+
 class Federation:
     """A client–server simulation over `m = len(datas)` clients.
 
     codecs / client_cfgs may be a single shared object or one per client
     (heterogeneous budgets). All clients see the same `loss_fn(params,
     batch)`; heterogeneity lives in the data shards and the budgets.
+
+    `use_cohorts=False` forces the scalar sequential path (the reference the
+    cohort engine is regression-tested against). `adaptive` + `codec_factory`
+    (rate → TreeCodec) turn on adaptive budget re-allocation; the initial
+    codecs' `.rate` attributes seed the allocation state.
     """
 
     def __init__(self, loss_fn: Callable, params, datas: Sequence,
                  codecs, client_cfgs=None,
-                 server_cfg: server_lib.ServerConfig = None, seed: int = 0):
+                 server_cfg: server_lib.ServerConfig = None, seed: int = 0,
+                 use_cohorts: bool = True,
+                 adaptive: Optional[budget_lib.AdaptiveConfig] = None,
+                 codec_factory: Optional[Callable] = None):
         m = len(datas)
         self.loss_fn = loss_fn
         self.datas = list(datas)
-        self.codecs = (list(codecs) if isinstance(codecs, (list, tuple))
-                       else [codecs] * m)
         if client_cfgs is None:
             client_cfgs = clients_lib.ClientConfig()
         self.client_cfgs = (list(client_cfgs)
                             if isinstance(client_cfgs, (list, tuple))
                             else [client_cfgs] * m)
-        if len(self.codecs) != m or len(self.client_cfgs) != m:
+        codecs = (list(codecs) if isinstance(codecs, (list, tuple))
+                  else [codecs] * m)
+        if len(codecs) != m or len(self.client_cfgs) != m:
             raise ValueError("need one codec / client config per client")
         self.server_cfg = server_cfg or server_lib.ServerConfig()
         self.server = server_lib.init_server(params, self.server_cfg, m)
@@ -78,17 +147,65 @@ class Federation:
             clients_lib.init_client_state(params, jax.random.fold_in(key, i),
                                           self.client_cfgs[i])
             for i in range(m)]
-        self.metas = [c.meta(params) for c in self.codecs]
-        # one compiled round fn per distinct (codec, client config)
+        self.use_cohorts = use_cohorts
+        self.adaptive = adaptive
+        self.codec_factory = codec_factory
+        if adaptive is not None:
+            if codec_factory is None:
+                raise ValueError("adaptive re-allocation needs a "
+                                 "codec_factory (rate → TreeCodec)")
+            rates = [getattr(c, "rate", None) for c in codecs]
+            if any(r is None for r in rates):
+                raise ValueError("adaptive re-allocation needs every initial "
+                                 "codec to expose a `.rate`")
+            self._rates = np.asarray([float(r) for r in rates])
+            self._ema = budget_lib.NormEMA(m, adaptive.ema_beta)
+        else:
+            self._rates = None
+            self._ema = None
+        # compiled-program caches, persistent across re-allocations: going
+        # back to a previously seen (spec, cfg) reuses the compiled fn
         self._round_fns: dict = {}
+        self._cohort_fns: dict = {}
+        self._cohort_decode_fns: dict = {}
+        self._stacked_data: dict = {}  # cohort key -> (members, stacked)
+        self._install_codecs(codecs)
+
+    # -- codec tables --------------------------------------------------------
+    def _fn_key(self, i: int) -> tuple:
+        # spec-less codecs key by the object itself (a frozen dataclass, so
+        # hashable) — keeping it alive in the cache key, which matters
+        # because the cache outlives set_rates and a recycled id() could
+        # otherwise alias a dead codec's compiled fn
+        spec = getattr(self.codecs[i], "spec", None)
+        return (spec if spec is not None else self.codecs[i],
+                self.client_cfgs[i])
+
+    def _install_codecs(self, codecs: Sequence) -> None:
+        m = self.num_clients
+        self.codecs = list(codecs)
+        self.metas = [c.meta(self.server.params) for c in self.codecs]
         for i in range(m):
-            k = (id(self.codecs[i]), id(self.client_cfgs[i]))
+            k = self._fn_key(i)
             if k not in self._round_fns:
                 self._round_fns[k] = clients_lib.make_client_round(
-                    loss_fn, self.codecs[i], self.client_cfgs[i], params)
-        self._fn_of = [
-            self._round_fns[(id(self.codecs[i]), id(self.client_cfgs[i]))]
+                    self.loss_fn, self.codecs[i], self.client_cfgs[i],
+                    self.server.params)
+        self._fn_of = [self._round_fns[self._fn_key(i)] for i in range(m)]
+        self._cohort_keys = [
+            cohort_key(self.codecs[i], self.client_cfgs[i], self.datas[i])
             for i in range(m)]
+
+    def set_rates(self, rates: Sequence[float]) -> None:
+        """Adopt new per-client budgets: rebuild codecs via `codec_factory`.
+
+        Compiled round programs are cached by (spec, config) / cohort key, so
+        only rates never seen before trigger a compile."""
+        if self.codec_factory is None:
+            raise ValueError("set_rates needs a codec_factory")
+        rates = [float(r) for r in rates]
+        self._rates = np.asarray(rates)
+        self._install_codecs([self.codec_factory(r) for r in rates])
 
     @property
     def num_clients(self) -> int:
@@ -109,20 +226,100 @@ class Federation:
         stragglers = [c for c, kp in zip(sampled, keep) if not kp]
         return participants, stragglers
 
+    def _maybe_reallocate(self, round_idx: int) -> bool:
+        if (self.adaptive is None or round_idx == 0
+                or round_idx % self.adaptive.realloc_every != 0):
+            return False
+        new, changed = budget_lib.reallocate(self.adaptive, self._ema,
+                                             self._rates)
+        if changed:
+            self.set_rates(new)
+        return changed
+
+    def _cohort_decode(self, key, i0: int):
+        """Compiled vmapped server decode for one cohort (lanes share the
+        codec and meta, so the whole cohort decodes as one program)."""
+        fn = self._cohort_decode_fns.get(key)
+        if fn is None:
+            codec, meta = self.codecs[i0], self.metas[i0]
+            fn = jax.jit(jax.vmap(lambda w: codec.decode(w, meta)))
+            self._cohort_decode_fns[key] = fn
+        return fn
+
+    def _run_clients(self, participants: Sequence[int],
+                     round_idx: int) -> tuple:
+        """Run every participant through its cohort (vmapped) or scalar
+        round fn; returns ({client_id: wire}, {client_id: decoded delta})
+        and updates states in place."""
+        wires_of: dict = {}
+        decoded_of: dict = {}
+        parts = partition_cohorts(
+            [(i, self._cohort_keys[i] if self.use_cohorts else None)
+             for i in participants])
+        for key, members in parts:
+            if key is not None and len(members) > 1:
+                fn = self._cohort_fns.get(key)
+                if fn is None:
+                    i0 = members[0]
+                    fn = clients_lib.make_cohort_round(
+                        self.loss_fn, self.codecs[i0], self.client_cfgs[i0],
+                        self.server.params)
+                    self._cohort_fns[key] = fn
+                # shards never change, so the stack is reusable whenever the
+                # cohort's membership repeats (always, at full
+                # participation); one cached entry per cohort key bounds the
+                # memory at one stacked copy of each cohort's data
+                mtuple = tuple(members)
+                cached = self._stacked_data.get(key)
+                if cached is not None and cached[0] == mtuple:
+                    data = cached[1]
+                else:
+                    data = clients_lib.stack_trees(
+                        [self.datas[i] for i in members])
+                    self._stacked_data[key] = (mtuple, data)
+                state = clients_lib.stack_trees(
+                    [self.states[i] for i in members])
+                wires, new_states = fn(self.server.params, data, state,
+                                       round_idx)
+                decoded = self._cohort_decode(key, members[0])(wires)
+                # one device→host transfer for everything except the PRNG
+                # lanes (typed key arrays can't cross into numpy); per-lane
+                # numpy views are free, per-lane device slices are not
+                h_wires, h_decoded, h_ef, h_seen = jax.device_get(
+                    (wires, decoded, new_states.ef, new_states.rounds_seen))
+                keys = new_states.key
+                lanes = len(members)
+                u_wires = clients_lib.unstack_tree(h_wires, lanes)
+                u_decoded = clients_lib.unstack_tree(h_decoded, lanes)
+                u_ef = clients_lib.unstack_tree(h_ef, lanes)
+                for lane, i in enumerate(members):
+                    wires_of[i] = u_wires[lane]
+                    decoded_of[i] = u_decoded[lane]
+                    self.states[i] = clients_lib.ClientState(
+                        ef=u_ef[lane], key=keys[lane],
+                        rounds_seen=h_seen[lane])
+            else:
+                for i in members:
+                    wires_of[i], self.states[i] = self._fn_of[i](
+                        self.server.params, self.datas[i], self.states[i],
+                        round_idx)
+                    decoded_of[i] = self.codecs[i].decode(wires_of[i],
+                                                          self.metas[i])
+        return wires_of, decoded_of
+
     def run_round(self, cfg: FedConfig, round_idx: int) -> dict:
+        realloc = self._maybe_reallocate(round_idx)
         participants, stragglers = self.sample_participants(cfg, round_idx)
-        wires = []
+        wires_of, decoded_of = self._run_clients(participants, round_idx)
         realized = analytic = 0.0
         for i in participants:
-            wire, self.states[i] = self._fn_of[i](
-                self.server.params, self.datas[i], self.states[i], round_idx)
-            wires.append(wire)
-            realized += self.codecs[i].wire_bytes(wire, self.metas[i])
+            realized += self.codecs[i].wire_bytes(wires_of[i], self.metas[i])
             analytic += self.codecs[i].wire_bits(self.server.params) / 8.0
         if participants:
-            deltas = server_lib.decode_deltas(
-                wires, [self.codecs[i] for i in participants],
-                [self.metas[i] for i in participants])
+            deltas = [decoded_of[i] for i in participants]
+            if self._ema is not None:
+                self._ema.update(participants,
+                                 server_lib.delta_norms(deltas))
             weights = self._weights(cfg, participants)
             slot_weights = (self._weights(cfg, range(self.num_clients))
                             if (self.server_cfg.aggregator == "fedmem"
@@ -132,7 +329,9 @@ class Federation:
                 slot_weights=slot_weights)
         return {"round": round_idx, "participants": participants,
                 "stragglers": stragglers, "wire_bytes": realized,
-                "analytic_bytes": analytic}
+                "analytic_bytes": analytic, "realloc": realloc,
+                "rates": (self._rates.tolist()
+                          if self._rates is not None else None)}
 
     def _weights(self, cfg: FedConfig, participants) -> np.ndarray:
         if cfg.weighting == "data_size":
@@ -146,11 +345,12 @@ class Federation:
         """Drive `cfg.num_rounds` rounds; returns the per-round history.
 
         history keys: round, loss (if eval_fn), wire_bytes, analytic_bytes,
-        cum_bytes, participants, stragglers.
+        cum_bytes, participants, stragglers, realloc, rates.
         """
         hist = {k: [] for k in ("round", "loss", "wire_bytes",
                                 "analytic_bytes", "cum_bytes",
-                                "participants", "stragglers")}
+                                "participants", "stragglers", "realloc",
+                                "rates")}
         cum = 0.0
         for t in range(cfg.num_rounds):
             rec = self.run_round(cfg, t)
@@ -161,6 +361,8 @@ class Federation:
             hist["cum_bytes"].append(cum)
             hist["participants"].append(rec["participants"])
             hist["stragglers"].append(rec["stragglers"])
+            hist["realloc"].append(rec["realloc"])
+            hist["rates"].append(rec["rates"])
             if eval_fn is not None:
                 hist["loss"].append(float(eval_fn(self.server.params)))
         return hist

@@ -16,10 +16,12 @@ tree — that is the reconciliation point — and only then aggregates:
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.optimizer.optim import Optimizer, apply_updates
 
@@ -60,6 +62,27 @@ def decode_deltas(wires: Sequence, codecs: Sequence, metas: Sequence) -> list:
     step: after this point budgets, chunk counts and masks are gone)."""
     return [codec.decode(wire, meta)
             for wire, codec, meta in zip(wires, codecs, metas)]
+
+
+def delta_norms(deltas: Sequence) -> list:
+    """Global ℓ2 norm ‖Δ̂_i‖ of each decoded delta tree.
+
+    This is the free signal the adaptive allocator runs on: the server
+    already decoded every participant's payload, so tracking the norms costs
+    no communication — exactly the quantity the distortion model
+    Σ ‖Δ_i‖²·4^{−R_i} in `repro.fed.budget` wants.
+    """
+    def norm(tree) -> float:
+        # host-side numpy: cohort-path deltas are already fetched numpy
+        # arrays, and per-leaf device round-trips would cost a blocking
+        # sync per participant per round
+        sq = 0.0
+        for x in jax.tree.leaves(tree):
+            flat = np.asarray(x, dtype=np.float64).ravel()
+            sq += float(flat @ flat)
+        return math.sqrt(sq)
+
+    return [norm(d) for d in deltas]
 
 
 def weighted_mean(deltas: Sequence, weights) -> Any:

@@ -12,7 +12,6 @@ from __future__ import annotations
 import os
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import fwht as _fwht_kernel
 from repro.kernels import quantpack as _quantpack_kernel

@@ -30,7 +30,7 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro import configs
 from repro.configs.shapes import SHAPES, applicable, input_specs

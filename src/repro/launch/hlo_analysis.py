@@ -77,7 +77,6 @@ class CollectiveStats:
 
 def collective_stats(hlo_text: str) -> CollectiveStats:
     stats = CollectiveStats()
-    seen_done = set()
     for m in _COLLECTIVE_RE.finditer(hlo_text):
         shape_text, kind = m.group(1), m.group(2)
         line = hlo_text[m.start():hlo_text.find("\n", m.start())]

@@ -16,11 +16,10 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
 from repro.checkpoint import save_checkpoint
-from repro.data import TokenStream, batch_for_shape
+from repro.data import batch_for_shape
 from repro.dist import step as step_lib
 from repro.dist.gradcomp import GradCompConfig, wire_bytes_tree
 from repro.launch.mesh import make_host_mesh

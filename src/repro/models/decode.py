@@ -22,7 +22,7 @@ finished slots independently mid-flight.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -196,7 +196,6 @@ def decode_step(cfg: ModelConfig, params: dict, state: DecodeState,
     if not cfg.decode_supported:
         raise ValueError(f"{cfg.name} is encoder-only: no decode step")
     dt = cfg.compute_dtype
-    b = tokens.shape[0]
     h = L.embed(tokens, params["embed"]).astype(dt)          # (B, 1, d)
     if "k" in state.caches:
         c = state.caches["k"].shape[2]

@@ -8,7 +8,6 @@ a drop-in replacement at deployment time.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax

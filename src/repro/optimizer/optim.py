@@ -13,7 +13,7 @@ through jit/shard_map/checkpointing unchanged and inherit param shardings.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional, Union
+from typing import Callable, Union
 
 import jax
 import jax.numpy as jnp

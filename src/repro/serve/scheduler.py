@@ -28,7 +28,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import decode as decode_lib
-from repro.models import model as model_lib
 
 
 @dataclasses.dataclass

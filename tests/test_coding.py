@@ -3,8 +3,6 @@ import math
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.coding import Codec, CodecConfig, compress_in_embedded_space

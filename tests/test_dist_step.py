@@ -1,7 +1,6 @@
 """Distributed train/serve step factories on the host mesh (1 device)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro import configs

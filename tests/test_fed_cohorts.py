@@ -1,0 +1,262 @@
+"""Cohort engine: partition properties, vmapped/sequential bit-exactness,
+adaptive budget re-allocation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.fed import (AdaptiveConfig, ClientConfig, FedConfig, Federation,
+                       NormEMA, ServerConfig, budget, clients as clients_lib,
+                       registry, rounds as rounds_lib)
+
+
+# ---------------------------------------------------------------------------
+# partitioner properties
+# ---------------------------------------------------------------------------
+@given(m=st.integers(1, 40), n_specs=st.integers(1, 5),
+       seed=st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_partition_is_exact_disjoint_cover(m, n_specs, seed):
+    """Any participant set splits into cohorts whose union is exactly the
+    input (no loss, no duplication) and whose members share a key; None keys
+    always land in singleton cohorts."""
+    rng = np.random.default_rng(seed)
+    keys = [None] + [("spec", i) for i in range(n_specs)]
+    assignment = [(i, keys[rng.integers(len(keys))]) for i in range(m)]
+    parts = rounds_lib.partition_cohorts(assignment)
+    all_members = [i for _, members in parts for i in members]
+    assert sorted(all_members) == list(range(m))          # exact cover
+    assert len(all_members) == len(set(all_members))      # disjoint
+    key_of = dict(assignment)
+    for key, members in parts:
+        if key is None:
+            assert len(members) == 1
+            assert key_of[members[0]] is None
+        else:
+            assert all(key_of[i] == key for i in members)
+
+
+def test_partition_preserves_order():
+    parts = rounds_lib.partition_cohorts(
+        [(3, "a"), (1, "b"), (4, "a"), (0, None), (2, "b")])
+    assert parts == [("a", [3, 4]), ("b", [1, 2]), (None, [0])]
+
+
+def test_cohort_key_requires_registry_spec():
+    """Codecs built outside registry.make carry no spec → never cohorted."""
+    params = {"x": jnp.zeros(8)}
+    data = {"g": jnp.zeros((2, 8))}
+    cfg = ClientConfig()
+    made = registry.make("identity")
+    assert rounds_lib.cohort_key(made, cfg, data) is not None
+    import dataclasses
+    bare = dataclasses.replace(made, spec=None)
+    assert rounds_lib.cohort_key(bare, cfg, data) is None
+
+
+def test_equal_make_calls_share_cohort_key():
+    """registry.make with equal args gives DISTINCT objects with EQUAL specs
+    — the property the cohort partitioner builds on."""
+    a = registry.make("ndsc", budget=2.0, chunk=32)
+    b = registry.make("ndsc", budget=2.0, chunk=32)
+    c = registry.make("ndsc", budget=2.0, chunk=64)
+    assert a is not b and a.spec == b.spec
+    assert a.spec != c.spec
+    data = {"g": jnp.zeros((4, 8))}
+    cfg = ClientConfig()
+    assert (rounds_lib.cohort_key(a, cfg, data)
+            == rounds_lib.cohort_key(b, cfg, data))
+    # different data SHAPES must split the cohort (stacking needs rectangles)
+    other = {"g": jnp.zeros((5, 8))}
+    assert (rounds_lib.cohort_key(a, cfg, data)
+            != rounds_lib.cohort_key(a, cfg, other))
+
+
+# ---------------------------------------------------------------------------
+# vmapped driver ≡ sequential driver, bit for bit
+# ---------------------------------------------------------------------------
+def _mixed_population(seed=0):
+    """m=6: three ndsc R=2 clients (distinct codec objects, equal specs),
+    two sub-linear ndsc R=0.75 (masked payloads), one identity; one client
+    has a different shard shape."""
+    ka, kx = jax.random.split(jax.random.key(seed))
+    m, dim, n = 6, 48, 64
+    a = jax.random.normal(ka, (m, n, dim)) / jnp.sqrt(n)
+    x_true = jax.random.normal(kx, (dim,))
+    shards = [{"a": a[i], "b": a[i] @ x_true} for i in range(m)]
+    shards[5] = {"a": a[5][:32], "b": (a[5] @ x_true)[:32]}
+
+    def loss_fn(p, batch):
+        r = batch["a"] @ p["x"] - batch["b"]
+        return 0.5 * jnp.mean(r * r)
+
+    codecs = ([registry.make("ndsc", budget=2.0, chunk=32) for _ in range(3)]
+              + [registry.make("ndsc", budget=0.75, chunk=32)
+                 for _ in range(2)]
+              + [registry.make("identity")])
+    return loss_fn, {"x": jnp.zeros(dim)}, shards, codecs
+
+
+def test_cohort_driver_bit_exact_with_sequential():
+    """Decoded global delta (≡ server params trajectory), per-round ledger
+    bytes, EF memories and PRNG-driven participation all match bit-for-bit
+    between the vmapped cohort driver and the scalar sequential one, on a
+    mixed homogeneous/heterogeneous population with partial participation."""
+    loss_fn, params, shards, codecs = _mixed_population()
+    ccfg = ClientConfig(local_steps=2, lr=0.3)
+    out = {}
+    for use_cohorts in (True, False):
+        fed = Federation(loss_fn, params, shards, list(codecs), ccfg,
+                         ServerConfig(), seed=3, use_cohorts=use_cohorts)
+        hist = fed.run(FedConfig(num_rounds=6, participation=0.8, dropout=0.2,
+                                 seed=9))
+        out[use_cohorts] = (fed, hist)
+    fed_c, hist_c = out[True]
+    fed_s, hist_s = out[False]
+    assert hist_c["participants"] == hist_s["participants"]
+    assert hist_c["wire_bytes"] == hist_s["wire_bytes"]        # to the byte
+    assert hist_c["analytic_bytes"] == hist_s["analytic_bytes"]
+    assert hist_c["wire_bytes"] == hist_c["analytic_bytes"]    # audit holds
+    np.testing.assert_array_equal(np.asarray(fed_c.server.params["x"]),
+                                  np.asarray(fed_s.server.params["x"]))
+    for sc, ss in zip(fed_c.states, fed_s.states):
+        np.testing.assert_array_equal(np.asarray(sc.ef["x"]),
+                                      np.asarray(ss.ef["x"]))
+        assert int(sc.rounds_seen) == int(ss.rounds_seen)
+
+
+def test_cohort_driver_compiles_once_per_cohort():
+    """3 equal-spec clients + 2 equal-spec clients + 1 singleton → exactly
+    2 cohort programs and 1 scalar program are built."""
+    loss_fn, params, shards, codecs = _mixed_population()
+    fed = Federation(loss_fn, params, shards, codecs,
+                     ClientConfig(local_steps=1, lr=0.2), ServerConfig(),
+                     seed=0)
+    fed.run(FedConfig(num_rounds=2))
+    assert len(fed._cohort_fns) == 2
+    assert len(fed._cohort_decode_fns) == 2
+    # scalar fns exist for all three distinct (spec, cfg) pairs (built in
+    # __init__ as the singleton fallback), but cohorts used the vmapped path
+    assert len(fed._round_fns) == 3
+
+
+def test_stack_unstack_roundtrip():
+    states = [clients_lib.init_client_state(
+        {"x": jnp.zeros(5)}, jax.random.key(i)) for i in range(3)]
+    stacked = clients_lib.stack_trees(states)
+    back = clients_lib.unstack_tree(stacked, 3)
+    for orig, rt in zip(states, back):
+        np.testing.assert_array_equal(np.asarray(orig.ef["x"]),
+                                      np.asarray(rt.ef["x"]))
+        assert jax.random.key_data(orig.key).tolist() == \
+            jax.random.key_data(rt.key).tolist()
+
+
+# ---------------------------------------------------------------------------
+# adaptive budget re-allocation
+# ---------------------------------------------------------------------------
+def _adaptive_fed(realloc_every=2, hysteresis=0.25, seed=0, rounds=None):
+    ka, kx = jax.random.split(jax.random.key(seed))
+    m, dim, n = 4, 48, 32
+    a = jax.random.normal(ka, (m, n, dim)) / jnp.sqrt(n)
+    x_true = jax.random.normal(kx, (dim,))
+    scales = np.logspace(-1, 1, m)
+    shards = [{"a": scales[i] * a[i], "b": scales[i] * (a[i] @ x_true)}
+              for i in range(m)]
+
+    def loss_fn(p, batch):
+        r = batch["a"] @ p["x"] - batch["b"]
+        return 0.5 * jnp.mean(r * r)
+
+    factory = lambda r: registry.make("ndsc", budget=float(r), chunk=32)
+    acfg = AdaptiveConfig(total_rate=8.0, realloc_every=realloc_every,
+                          hysteresis=hysteresis, grid=0.25, min_rate=0.25)
+    fed = Federation(loss_fn, {"x": jnp.zeros(dim)}, shards,
+                     [factory(2.0) for _ in range(m)],
+                     ClientConfig(local_steps=1, lr=0.3), ServerConfig(),
+                     seed=seed, adaptive=acfg, codec_factory=factory)
+    return fed, acfg
+
+
+def test_adaptive_reallocates_and_keeps_ledger_exact():
+    fed, acfg = _adaptive_fed(realloc_every=2)
+    hist = fed.run(FedConfig(num_rounds=8, seed=1))
+    assert any(hist["realloc"]), "allocator never adapted"
+    # re-allocation only at realloc_every boundaries, never at round 0
+    for t, flag in enumerate(hist["realloc"]):
+        if flag:
+            assert t > 0 and t % acfg.realloc_every == 0
+    # total budget conserved on the lattice, rates within bounds
+    for rates in hist["rates"]:
+        assert rates is not None
+        assert sum(rates) == pytest.approx(acfg.total_rate, abs=acfg.grid)
+        assert all(acfg.min_rate - 1e-9 <= r <= acfg.max_rate + 1e-9
+                   for r in rates)
+        assert all(abs(r / acfg.grid - round(r / acfg.grid)) < 1e-9
+                   for r in rates)
+    # the ledger stays byte-exact across codec rebuilds
+    assert hist["wire_bytes"] == hist["analytic_bytes"]
+
+
+def test_adaptive_requires_factory_and_rates():
+    data = {"a": jnp.zeros((4, 8)), "b": jnp.zeros(4)}
+    loss = lambda p, b: jnp.sum(p["x"])
+    acfg = AdaptiveConfig(total_rate=4.0)
+    with pytest.raises(ValueError, match="codec_factory"):
+        Federation(loss, {"x": jnp.zeros(8)}, [data],
+                   registry.make("ndsc", budget=2.0, chunk=32),
+                   adaptive=acfg)
+    # baseline codecs without a .rate can't seed the allocation state
+    import dataclasses
+    bare = dataclasses.replace(registry.make("ndsc", budget=2.0, chunk=32),
+                               rate=None)
+    with pytest.raises(ValueError, match="rate"):
+        Federation(loss, {"x": jnp.zeros(8)}, [data], bare,
+                   adaptive=acfg,
+                   codec_factory=lambda r: registry.make("ndsc", budget=r))
+
+
+def test_hysteresis_suppresses_churn():
+    """With an enormous hysteresis the allocation never moves (and no new
+    programs compile); with zero hysteresis it adapts."""
+    frozen, _ = _adaptive_fed(realloc_every=2, hysteresis=100.0)
+    hist = frozen.run(FedConfig(num_rounds=6, seed=1))
+    assert not any(hist["realloc"])
+    assert all(r == hist["rates"][0] for r in hist["rates"])
+    moving, _ = _adaptive_fed(realloc_every=2, hysteresis=0.0)
+    hist2 = moving.run(FedConfig(num_rounds=6, seed=1))
+    assert any(hist2["realloc"])
+
+
+def test_ema_tracks_and_fills_unseen():
+    ema = NormEMA(3, beta=0.5)
+    assert np.allclose(ema.snapshot(), 1.0)      # no observations yet
+    ema.update([0], [4.0])
+    snap = ema.snapshot()
+    assert snap[0] == 4.0                        # first obs initializes
+    assert snap[1] == snap[2] == 4.0             # unseen filled with mean
+    ema.update([0], [0.0])
+    assert ema.snapshot()[0] == pytest.approx(2.0)   # 0.5·4 + 0.5·0
+
+
+@given(avg=st.floats(0.5, 7.5), m=st.integers(2, 10),
+       seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_quantize_rates_lattice_and_conservation(avg, m, seed):
+    rng = np.random.default_rng(seed)
+    total = avg * m
+    raw = budget.allocate("waterfill", total, m,
+                          norms=rng.uniform(0.1, 10.0, m), min_rate=0.25)
+    grid = 0.25
+    q = budget.quantize_rates(raw, grid, total, 0.25, 8.0)
+    assert q.sum() == pytest.approx(total, abs=grid)
+    assert all(0.25 - 1e-9 <= r <= 8.0 + 1e-9 for r in q)
+    assert all(abs(r / grid - round(r / grid)) < 1e-9 for r in q)
+
+
+def test_delta_norms_matches_tree_norm():
+    from repro.fed import delta_norms
+    trees = [{"a": jnp.array([3.0, 4.0]), "b": jnp.zeros(2)},
+             {"a": jnp.array([0.0, 0.0]), "b": jnp.array([5.0, 12.0])}]
+    assert delta_norms(trees) == pytest.approx([5.0, 13.0])

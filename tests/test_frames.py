@@ -1,6 +1,5 @@
 """Frame constructions: Parseval property, adjoint consistency (paper §2)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -3,11 +3,9 @@ import math
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core.coding import Codec, CodecConfig
-from repro.core.embeddings import EmbeddingSpec
 from repro.core import frames as F
 from repro.core import optim as O
 from repro.core import baselines as B

@@ -1,7 +1,6 @@
 """Continuous-batching scheduler: slot refill correctness and throughput."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro import configs

@@ -1,5 +1,4 @@
 """Substrate: optimizer, data pipeline, checkpointing, sharding rules."""
-import os
 
 import jax
 import jax.numpy as jnp
@@ -8,8 +7,8 @@ import pytest
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.data import TokenStream, synthetic_regression, synthetic_two_class
-from repro.dist.sharding import (batch_specs, data_axes_for, param_spec,
-                                 param_specs, shardable)
+from repro.dist.sharding import (data_axes_for, param_spec, param_specs,
+                                 shardable)
 from repro.optimizer import (adamw, clip_by_global_norm, cosine_schedule,
                              global_norm, sgd, warmup_cosine)
 from repro.optimizer.optim import apply_updates
