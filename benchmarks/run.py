@@ -27,6 +27,7 @@ import traceback
 # benchmark name -> module under benchmarks/ exposing run(**kwargs)
 ALL = {
     "fed": "fed_heterogeneous",
+    "fed_agg": "fed_aggregate_scaling",
     "fed_cohort": "fed_cohort_scaling",
     "table1": "table1_compressors",
     "fig1a": "fig1a_compression_error",
@@ -45,6 +46,7 @@ ALL = {
 # benchmark's internal assertions still hold
 TINY = {
     "fed": dict(m=6, dim=96, rounds=30, chunk=32),
+    "fed_agg": dict(m_values=(8, 64), dim=256, reps=3),
     "fed_cohort": dict(m_values=(8, 32), dim=48, per_client=16, rounds=3,
                        adaptive_m=8, adaptive_rounds=25),
     "table1": dict(n=256, trials=5),

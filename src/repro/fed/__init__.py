@@ -16,23 +16,25 @@ and budgets can re-allocate adaptively from the server-side delta-norm EMA.
 """
 from repro.fed import budget, registry
 from repro.fed.budget import AdaptiveConfig, NormEMA
-from repro.fed.clients import (ClientConfig, ClientState, data_signature,
-                               init_client_state, local_sgd,
+from repro.fed.clients import (ClientConfig, ClientState, concat_stacks,
+                               data_signature, init_client_state, local_sgd,
                                make_client_round, make_cohort_round,
                                stack_trees, unstack_tree)
 from repro.fed.registry import TreeCodec, available, codec_spec, make
 from repro.fed.rounds import (FedConfig, Federation, cohort_key,
                               partition_cohorts)
-from repro.fed.server import (AGGREGATORS, ServerConfig, ServerState,
-                              aggregate, decode_deltas, delta_norms,
-                              init_server)
+from repro.fed.server import (AGGREGATORS, SUM_MODES, ServerConfig,
+                              ServerState, aggregate, aggregate_stacked,
+                              decode_deltas, delta_norms, init_server,
+                              stacked_norms, tree_norm)
 
 __all__ = [
     "AGGREGATORS", "AdaptiveConfig", "ClientConfig", "ClientState",
-    "FedConfig", "Federation", "NormEMA", "ServerConfig", "ServerState",
-    "TreeCodec", "aggregate", "available", "budget", "codec_spec",
-    "cohort_key", "data_signature", "decode_deltas", "delta_norms",
-    "init_client_state", "init_server", "local_sgd", "make",
-    "make_client_round", "make_cohort_round", "partition_cohorts", "registry",
-    "stack_trees", "unstack_tree",
+    "FedConfig", "Federation", "NormEMA", "SUM_MODES", "ServerConfig",
+    "ServerState", "TreeCodec", "aggregate", "aggregate_stacked",
+    "available", "budget", "codec_spec", "cohort_key", "concat_stacks",
+    "data_signature", "decode_deltas", "delta_norms", "init_client_state",
+    "init_server", "local_sgd", "make", "make_client_round",
+    "make_cohort_round", "partition_cohorts", "registry", "stack_trees",
+    "stacked_norms", "tree_norm", "unstack_tree",
 ]

@@ -165,11 +165,17 @@ class NormEMA:
         self.seen = np.zeros(num_clients, dtype=bool)
 
     def update(self, ids: Sequence[int], norms: Sequence[float]) -> None:
-        for i, n in zip(ids, norms):
-            n = float(n)
-            self.norms[i] = (self.beta * self.norms[i] + (1.0 - self.beta) * n
-                             if self.seen[i] else n)
-            self.seen[i] = True
+        """One vectorized scatter per round (`ids` are distinct participant
+        indices, so the fancy-indexed write never collides) — the per-lane
+        norms arrive as one device fetch of m scalars, and this keeps the
+        host side O(1) numpy calls rather than an O(m) Python loop."""
+        idx = np.asarray(list(ids), dtype=np.intp)
+        if idx.size == 0:
+            return
+        vals = np.asarray(list(norms), dtype=np.float64)
+        blended = self.beta * self.norms[idx] + (1.0 - self.beta) * vals
+        self.norms[idx] = np.where(self.seen[idx], blended, vals)
+        self.seen[idx] = True
 
     def snapshot(self) -> np.ndarray:
         out = self.norms.copy()

@@ -142,6 +142,24 @@ def unstack_tree(tree, m: int) -> list:
     return [jax.tree.map(lambda a, i=i: a[i], tree) for i in range(m)]
 
 
+def concat_stacks(stacks: list, perm=None):
+    """Concatenate already-stacked pytrees along the lane axis, optionally
+    permuting the lanes of the result.
+
+    This is the server-side join between per-cohort stacked decode outputs
+    and the single stacked tree `server.aggregate_stacked` reduces: O(L)
+    device ops total (one concatenate + one gather per leaf) instead of the
+    O(m·L) per-participant unstack the host-loop path paid. A single stack
+    with `perm=None` passes through untouched (the full-participation /
+    one-cohort fast path)."""
+    out = (stacks[0] if len(stacks) == 1
+           else jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *stacks))
+    if perm is not None:
+        p = jnp.asarray(perm, jnp.int32)
+        out = jax.tree.map(lambda a: a[p], out)
+    return out
+
+
 def data_signature(data) -> tuple:
     """Hashable (treedef, leaf shapes/dtypes) — cohort lanes must agree on it
     for `stack_trees` to produce one rectangular batch."""

@@ -29,6 +29,7 @@ also be a per-leaf sequence (see `repro.fed.budget.split_leaf_budgets`).
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import math
 from typing import Callable, Optional
 
@@ -94,10 +95,30 @@ def codec_spec(name: str, budget, kwargs: dict) -> tuple:
     from the seed, never from object identity), so `repro.fed.rounds` uses
     the spec as its cohort key and shares one compiled vmapped program among
     all clients whose codecs compare equal.
-    """
-    budget_key = (float(budget) if np.isscalar(budget)
-                  else tuple(float(b) for b in budget))
-    return (name, budget_key, tuple(sorted(kwargs.items())))
+
+    The kwargs are CANONICALIZED against the factory signature before they
+    enter the spec: `make("ndsc", 1.5)` and `make("ndsc", 1.5, chunk=128)`
+    build identical codecs, so they must land in one cohort — leaving the
+    caller's kwargs raw would split that cohort in two and compile every
+    vmapped round/decode program twice. Keywords a factory swallows through
+    `**_` stay as written (they don't have defaults to bind)."""
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown compressor {name!r}; available: {available()}")
+    sig = inspect.signature(_REGISTRY[name])
+    params = list(sig.parameters.values())
+    bound = sig.bind(budget, **kwargs)
+    bound.apply_defaults()
+    budget_val = bound.arguments[params[0].name]
+    items: dict = {}
+    for p in params[1:]:
+        if p.kind is inspect.Parameter.VAR_KEYWORD:
+            items.update(bound.arguments.get(p.name, {}))
+        else:
+            items[p.name] = bound.arguments[p.name]
+    budget_key = (float(budget_val) if np.isscalar(budget_val)
+                  else tuple(float(b) for b in budget_val))
+    return (name, budget_key, tuple(sorted(items.items())))
 
 
 def make(name: str, budget: float = 4.0, **kwargs) -> TreeCodec:

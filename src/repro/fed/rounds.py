@@ -35,10 +35,20 @@ Round lifecycle (README has the diagram):
   4. partition survivors into cohorts; each cohort (vmapped) or singleton
      (scalar) round fn → payloads + new EF states,
   5. ledger records REALIZED payload bytes (codec.wire_bytes) and the
-     analytic audit (codec.wire_bits / 8) — equal to the byte for the NDSC
-     backend under exact_keep,
-  6. server decodes every payload with its client's codec, feeds the decoded
-     norms to the allocator EMA, and aggregates.
+     analytic audit — computed ONCE per codec spec at `_install_codecs` time
+     (`codec.wire_bits` walks the whole params tree on host, so it must not
+     run per participant per round) and equal to the realized bytes for the
+     NDSC backend under exact_keep,
+  6. server decodes every payload with its client's codec — each cohort
+     decode is one compiled program that also emits per-lane ℓ2 norms (the
+     allocator EMA fetches m scalars, never m decoded trees) — joins the
+     per-cohort stacks into ONE stacked device tree in participant order,
+     and aggregates it with `server.aggregate_stacked` (a single jit
+     program; `sum_mode="sequential"` keeps the reference summation order).
+     Decoded deltas never leave the device between decode and the params
+     update. `use_cohorts=False` instead drives the PR-2 list-layout
+     reference (`server.aggregate`), which the stacked path is regression-
+     tested bit-exact against.
 
 Dropped/unsampled clients keep their EF memory and PRNG lane untouched —
 they never encoded, so there is nothing to feed back (straggler semantics).
@@ -168,18 +178,22 @@ class Federation:
         self._round_fns: dict = {}
         self._cohort_fns: dict = {}
         self._cohort_decode_fns: dict = {}
+        self._decode_fns: dict = {}    # spec key -> scalar decode+norm fn
+        self._audit_bits: dict = {}    # spec key -> analytic wire_bits
         self._stacked_data: dict = {}  # cohort key -> (members, stacked)
         self._install_codecs(codecs)
 
     # -- codec tables --------------------------------------------------------
-    def _fn_key(self, i: int) -> tuple:
+    def _spec_key(self, i: int):
         # spec-less codecs key by the object itself (a frozen dataclass, so
         # hashable) — keeping it alive in the cache key, which matters
-        # because the cache outlives set_rates and a recycled id() could
-        # otherwise alias a dead codec's compiled fn
+        # because the caches outlive set_rates and a recycled id() could
+        # otherwise alias a dead codec's compiled fn / cached audit
         spec = getattr(self.codecs[i], "spec", None)
-        return (spec if spec is not None else self.codecs[i],
-                self.client_cfgs[i])
+        return spec if spec is not None else self.codecs[i]
+
+    def _fn_key(self, i: int) -> tuple:
+        return (self._spec_key(i), self.client_cfgs[i])
 
     def _install_codecs(self, codecs: Sequence) -> None:
         m = self.num_clients
@@ -195,6 +209,17 @@ class Federation:
         self._cohort_keys = [
             cohort_key(self.codecs[i], self.client_cfgs[i], self.datas[i])
             for i in range(m)]
+        # analytic wire audit, once per distinct codec spec: wire_bits walks
+        # the whole params tree on host, so recomputing it per participant
+        # per round was an O(m·L·rounds) hot spot (and the params TEMPLATE —
+        # shapes/dtypes — never changes, so the audit can't go stale)
+        for i in range(m):
+            sk = self._spec_key(i)
+            if sk not in self._audit_bits:
+                self._audit_bits[sk] = float(
+                    self.codecs[i].wire_bits(self.server.params))
+        self._analytic_bits = [self._audit_bits[self._spec_key(i)]
+                               for i in range(m)]
 
     def set_rates(self, rates: Sequence[float]) -> None:
         """Adopt new per-client budgets: rebuild codecs via `codec_factory`.
@@ -238,21 +263,50 @@ class Federation:
 
     def _cohort_decode(self, key, i0: int):
         """Compiled vmapped server decode for one cohort (lanes share the
-        codec and meta, so the whole cohort decodes as one program)."""
+        codec and meta, so the whole cohort decodes as one program). Emits
+        (stacked decoded deltas, per-lane ℓ2 norms) — both device arrays."""
         fn = self._cohort_decode_fns.get(key)
         if fn is None:
             codec, meta = self.codecs[i0], self.metas[i0]
-            fn = jax.jit(jax.vmap(lambda w: codec.decode(w, meta)))
+
+            def decode_cohort(wires):
+                decoded = jax.vmap(lambda w: codec.decode(w, meta))(wires)
+                return decoded, server_lib.stacked_norms(decoded)
+
+            fn = jax.jit(decode_cohort)
             self._cohort_decode_fns[key] = fn
+        return fn
+
+    def _scalar_decode(self, i: int):
+        """Compiled singleton decode+norm, shaped like a 1-lane cohort
+        (leading lane axis) so it joins `concat_stacks` uniformly."""
+        k = self._spec_key(i)
+        fn = self._decode_fns.get(k)
+        if fn is None:
+            codec, meta = self.codecs[i], self.metas[i]
+
+            def decode_one(wire):
+                decoded = codec.decode(wire, meta)
+                return (jax.tree.map(lambda x: x[None], decoded),
+                        server_lib.tree_norm(decoded)[None])
+
+            fn = jax.jit(decode_one)
+            self._decode_fns[k] = fn
         return fn
 
     def _run_clients(self, participants: Sequence[int],
                      round_idx: int) -> tuple:
         """Run every participant through its cohort (vmapped) or scalar
-        round fn; returns ({client_id: wire}, {client_id: decoded delta})
-        and updates states in place."""
+        round fn; returns ({client_id: wire}, [(members, stacked decoded
+        deltas, per-lane norms), ...]) and updates states in place.
+
+        The stacked decode outputs STAY on device: only the wires (the
+        compressed payloads, for the realized-bytes ledger), the EF trees
+        and the round counters cross to host. The decoded dense deltas —
+        m × params-sized, the dominant transfer of the old path — flow
+        straight into `server.aggregate_stacked`."""
         wires_of: dict = {}
-        decoded_of: dict = {}
+        groups: list = []
         parts = partition_cohorts(
             [(i, self._cohort_keys[i] if self.use_cohorts else None)
              for i in participants])
@@ -281,52 +335,84 @@ class Federation:
                     [self.states[i] for i in members])
                 wires, new_states = fn(self.server.params, data, state,
                                        round_idx)
-                decoded = self._cohort_decode(key, members[0])(wires)
+                decoded, norms = self._cohort_decode(key, members[0])(wires)
                 # one device→host transfer for everything except the PRNG
                 # lanes (typed key arrays can't cross into numpy); per-lane
                 # numpy views are free, per-lane device slices are not
-                h_wires, h_decoded, h_ef, h_seen = jax.device_get(
-                    (wires, decoded, new_states.ef, new_states.rounds_seen))
+                h_wires, h_ef, h_seen = jax.device_get(
+                    (wires, new_states.ef, new_states.rounds_seen))
                 keys = new_states.key
                 lanes = len(members)
                 u_wires = clients_lib.unstack_tree(h_wires, lanes)
-                u_decoded = clients_lib.unstack_tree(h_decoded, lanes)
                 u_ef = clients_lib.unstack_tree(h_ef, lanes)
                 for lane, i in enumerate(members):
                     wires_of[i] = u_wires[lane]
-                    decoded_of[i] = u_decoded[lane]
                     self.states[i] = clients_lib.ClientState(
                         ef=u_ef[lane], key=keys[lane],
                         rounds_seen=h_seen[lane])
+                groups.append((members, decoded, norms))
             else:
                 for i in members:
                     wires_of[i], self.states[i] = self._fn_of[i](
                         self.server.params, self.datas[i], self.states[i],
                         round_idx)
-                    decoded_of[i] = self.codecs[i].decode(wires_of[i],
-                                                          self.metas[i])
-        return wires_of, decoded_of
+                    decoded1, norm1 = self._scalar_decode(i)(wires_of[i])
+                    groups.append(([i], decoded1, norm1))
+        return wires_of, groups
+
+    @staticmethod
+    def _combine_groups(groups: Sequence, participants: Sequence[int]):
+        """Join per-cohort stacks into ONE stacked tree in participant order
+        (the order the sequential reference reduces in) plus the per-lane
+        norms in group order with their client ids.
+
+        At full participation with one cohort this is a pass-through; in
+        general it costs one concatenate + one gather per leaf — O(L) device
+        ops, independent of m."""
+        order = [i for members, _, _ in groups for i in members]
+        perm = None
+        if order != list(participants):
+            pos = {c: j for j, c in enumerate(order)}
+            perm = np.asarray([pos[c] for c in participants], np.int32)
+        stacked = clients_lib.concat_stacks([g[1] for g in groups], perm)
+        norms = clients_lib.concat_stacks([g[2] for g in groups])
+        return stacked, order, norms
 
     def run_round(self, cfg: FedConfig, round_idx: int) -> dict:
         realloc = self._maybe_reallocate(round_idx)
         participants, stragglers = self.sample_participants(cfg, round_idx)
-        wires_of, decoded_of = self._run_clients(participants, round_idx)
+        wires_of, groups = self._run_clients(participants, round_idx)
         realized = analytic = 0.0
         for i in participants:
             realized += self.codecs[i].wire_bytes(wires_of[i], self.metas[i])
-            analytic += self.codecs[i].wire_bits(self.server.params) / 8.0
+            analytic += self._analytic_bits[i] / 8.0
         if participants:
-            deltas = [decoded_of[i] for i in participants]
-            if self._ema is not None:
-                self._ema.update(participants,
-                                 server_lib.delta_norms(deltas))
             weights = self._weights(cfg, participants)
             slot_weights = (self._weights(cfg, range(self.num_clients))
                             if (self.server_cfg.aggregator == "fedmem"
                                 and cfg.weighting != "uniform") else None)
-            self.server = server_lib.aggregate(
-                self.server, self.server_cfg, deltas, weights, participants,
-                slot_weights=slot_weights)
+            if self.use_cohorts:
+                stacked, order, norms = self._combine_groups(groups,
+                                                             participants)
+                if self._ema is not None:
+                    self._ema.update(order, np.asarray(
+                        jax.device_get(norms), np.float64))
+                self.server = server_lib.aggregate_stacked(
+                    self.server, self.server_cfg, stacked, weights,
+                    participants, slot_weights=slot_weights)
+            else:
+                # PR-2 list-layout reference: per-participant trees, host
+                # reduction loop (the oracle the stacked path is tested
+                # against; norms come from the same decode programs)
+                deltas = [jax.tree.map(lambda x: x[0], g[1]) for g in groups]
+                if self._ema is not None:
+                    norms = np.concatenate(
+                        [np.asarray(jax.device_get(g[2]), np.float64)
+                         for g in groups])
+                    self._ema.update([g[0][0] for g in groups], norms)
+                self.server = server_lib.aggregate(
+                    self.server, self.server_cfg, deltas, weights,
+                    participants, slot_weights=slot_weights)
         return {"round": round_idx, "participants": participants,
                 "stragglers": stragglers, "wire_bytes": realized,
                 "analytic_bytes": analytic, "realloc": realloc,

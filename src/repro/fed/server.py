@@ -12,10 +12,44 @@ tree — that is the reconciliation point — and only then aggregates:
            every decoded Δ̂_i and the step uses the mean over ALL slots, so
            non-participants contribute their last known update — smoothing
            partial participation instead of amplifying it.
+
+Two aggregation layouts share those semantics:
+
+  * the LIST layout (`aggregate`) — one decoded tree per participant,
+    reduced left-to-right by a host loop of `jax.tree.map`s. This is the
+    PR-2 reference: O(m·L) eager dispatches per round, the wall-clock bound
+    at large m, kept as the bit-exactness oracle.
+  * the STACKED layout (`aggregate_stacked`) — every participant's decoded
+    delta is lane l of one stacked device tree and the O(m) lane reduction
+    (the wall-clock bound) runs as ONE compiled program.
+    `ServerConfig.sum_mode` picks the reduction order:
+
+      "sequential"  lanes reduce left-to-right via `lax.fori_loop` — the
+                    SAME float summation order as the list reference, so
+                    params / fedmem memory stay bit-exact with it
+                    (regression-tested) while the per-participant dispatch
+                    and transfer overhead disappears;
+      "pairwise"    balanced pairwise tree-reduction — faster and with
+                    O(log m) rounding depth instead of O(m), but a
+                    DIFFERENT summation order: agrees with the reference
+                    only to float tolerance (~1e-6 relative), never bitwise.
+
+    The m-independent tail — η_s step, fedopt optimizer update — then
+    replays the EXACT eager ops of the list reference (shared helpers, a
+    handful of dispatches regardless of m). This split is deliberate: XLA
+    contracts a·b+c chains into FMAs inside a fused program (single
+    rounding, ±1 ulp vs the reference's separate eager ops, and
+    `lax.optimization_barrier` does not stop it on CPU), so the compiled
+    region is arranged so every multiply is materialized before its add —
+    the weighted lanes are formed first, then folded with pure adds — and
+    everything XLA would re-fuse with the optimizer/step arithmetic stays
+    in the reference's op-by-op form. That is what makes "sequential"
+    bit-exact rather than merely order-preserving.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Any, NamedTuple, Optional, Sequence
 
@@ -26,6 +60,7 @@ import numpy as np
 from repro.optimizer.optim import Optimizer, apply_updates
 
 AGGREGATORS = ("fedavg", "fedopt", "fedmem")
+SUM_MODES = ("sequential", "pairwise")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,6 +68,7 @@ class ServerConfig:
     aggregator: str = "fedavg"
     server_lr: float = 1.0                  # fedavg / fedmem step size
     optimizer: Optional[Optimizer] = None   # required for fedopt
+    sum_mode: str = "sequential"            # stacked-lane reduction order
 
     def __post_init__(self):
         if self.aggregator not in AGGREGATORS:
@@ -40,6 +76,9 @@ class ServerConfig:
                              f"got {self.aggregator!r}")
         if self.aggregator == "fedopt" and self.optimizer is None:
             raise ValueError("fedopt needs a repro.optimizer Optimizer")
+        if self.sum_mode not in SUM_MODES:
+            raise ValueError(f"sum_mode must be one of {SUM_MODES}, "
+                             f"got {self.sum_mode!r}")
 
 
 class ServerState(NamedTuple):
@@ -64,18 +103,30 @@ def decode_deltas(wires: Sequence, codecs: Sequence, metas: Sequence) -> list:
             for wire, codec, meta in zip(wires, codecs, metas)]
 
 
-def delta_norms(deltas: Sequence) -> list:
-    """Global ℓ2 norm ‖Δ̂_i‖ of each decoded delta tree.
+def tree_norm(tree) -> jax.Array:
+    """Global ℓ2 norm of one pytree, jit-safe (f32 accumulation, leaf order
+    fixed by `jax.tree.leaves`).
 
-    This is the free signal the adaptive allocator runs on: the server
-    already decoded every participant's payload, so tracking the norms costs
-    no communication — exactly the quantity the distortion model
-    Σ ‖Δ_i‖²·4^{−R_i} in `repro.fed.budget` wants.
+    This is what the cohort decode programs emit per lane: the adaptive
+    allocator's signal Σ ‖Δ̂_i‖²·4^{−R_i} needs one scalar per participant,
+    so the round driver fetches m scalars instead of m decoded trees."""
+    sq = jnp.zeros((), jnp.float32)
+    for x in jax.tree.leaves(tree):
+        sq = sq + jnp.sum(jnp.square(x.astype(jnp.float32)))
+    return jnp.sqrt(sq)
+
+
+stacked_norms = jax.vmap(tree_norm)   # stacked tree → (lanes,) per-lane norms
+
+
+def delta_norms(deltas: Sequence) -> list:
+    """Host-side float64 reference for per-tree ℓ2 norms.
+
+    Superseded in the round driver by the decode-program-emitted
+    `tree_norm` lanes (no per-participant host round trips); kept as the
+    high-precision oracle the tests compare the device norms against.
     """
     def norm(tree) -> float:
-        # host-side numpy: cohort-path deltas are already fetched numpy
-        # arrays, and per-leaf device round-trips would cost a blocking
-        # sync per participant per round
         sq = 0.0
         for x in jax.tree.leaves(tree):
             flat = np.asarray(x, dtype=np.float64).ravel()
@@ -85,7 +136,21 @@ def delta_norms(deltas: Sequence) -> list:
     return [norm(d) for d in deltas]
 
 
+def _check_weights(weights, what: str = "weights") -> None:
+    """Weight sums divide the aggregate: a non-positive (or NaN) sum would
+    silently poison the params, e.g. `weighting="data_size"` over empty
+    shards. Fail loudly instead."""
+    total = float(np.sum(np.asarray(jax.device_get(weights), np.float64)))
+    if not (total > 0.0 and math.isfinite(total)):
+        raise ValueError(
+            f"{what} must have a positive finite sum, got {total} — with "
+            f'weighting="data_size" this usually means every participating '
+            f"shard is empty")
+
+
 def weighted_mean(deltas: Sequence, weights) -> Any:
+    """List-layout reference: Σ w_i Δ̂_i / Σ w_i, reduced left-to-right."""
+    _check_weights(weights)
     w = jnp.asarray(weights, jnp.float32)
     w = w / jnp.sum(w)
     acc = jax.tree.map(lambda x: w[0] * x.astype(jnp.float32), deltas[0])
@@ -95,10 +160,32 @@ def weighted_mean(deltas: Sequence, weights) -> Any:
     return acc
 
 
+def _apply_delta(params, direction, server_lr: float):
+    """x ← x + η_s·direction — the ONE shared implementation both layouts
+    step through, so the list reference and the stacked path run literally
+    the same eager ops (part of the bit-exactness contract)."""
+    return jax.tree.map(
+        lambda p, d: (p.astype(jnp.float32)
+                      + server_lr * d).astype(p.dtype),
+        params, direction)
+
+
+def _fedopt_tail(state: ServerState, cfg: ServerConfig, mean) -> ServerState:
+    """Server-optimizer step from the weighted delta mean (shared by both
+    layouts; the optimizer update is m-independent, so it stays in the
+    reference's eager form — see the module docstring on FMA contraction)."""
+    pseudo_grad = jax.tree.map(jnp.negative, mean)
+    updates, opt_state = cfg.optimizer.update(
+        pseudo_grad, state.opt_state, state.params)
+    return ServerState(apply_updates(state.params, updates),
+                       opt_state, state.memory)
+
+
 def aggregate(state: ServerState, cfg: ServerConfig, deltas: Sequence,
               weights, participant_ids: Optional[Sequence[int]] = None,
               slot_weights=None) -> ServerState:
-    """One server step from the decoded participant deltas.
+    """One server step from a LIST of decoded participant deltas (the
+    sequential reference; large-m rounds use `aggregate_stacked`).
 
     `participant_ids` (client indices aligned with `deltas`) is only needed
     by fedmem to refresh the right memory slots; `slot_weights` (one per
@@ -108,19 +195,11 @@ def aggregate(state: ServerState, cfg: ServerConfig, deltas: Sequence,
         return state
     if cfg.aggregator == "fedavg":
         mean = weighted_mean(deltas, weights)
-        params = jax.tree.map(
-            lambda p, d: (p.astype(jnp.float32)
-                          + cfg.server_lr * d).astype(p.dtype),
-            state.params, mean)
-        return ServerState(params, state.opt_state, state.memory)
+        return ServerState(_apply_delta(state.params, mean, cfg.server_lr),
+                           state.opt_state, state.memory)
 
     if cfg.aggregator == "fedopt":
-        mean = weighted_mean(deltas, weights)
-        pseudo_grad = jax.tree.map(jnp.negative, mean)
-        updates, opt_state = cfg.optimizer.update(
-            pseudo_grad, state.opt_state, state.params)
-        return ServerState(apply_updates(state.params, updates),
-                           opt_state, state.memory)
+        return _fedopt_tail(state, cfg, weighted_mean(deltas, weights))
 
     # fedmem: refresh participating slots, step with the mean over ALL slots
     if participant_ids is None:
@@ -133,12 +212,135 @@ def aggregate(state: ServerState, cfg: ServerConfig, deltas: Sequence,
     if slot_weights is None:
         direction = jax.tree.map(lambda m: jnp.mean(m, axis=0), memory)
     else:
+        _check_weights(slot_weights, "slot_weights")
         sw = jnp.asarray(slot_weights, jnp.float32)
         sw = sw / jnp.sum(sw)
         direction = jax.tree.map(
             lambda m: jnp.tensordot(sw, m, axes=1), memory)
-    params = jax.tree.map(
-        lambda p, d: (p.astype(jnp.float32)
-                      + cfg.server_lr * d).astype(p.dtype),
-        state.params, direction)
-    return ServerState(params, state.opt_state, memory)
+    return ServerState(_apply_delta(state.params, direction, cfg.server_lr),
+                       state.opt_state, memory)
+
+
+# ---------------------------------------------------------------------------
+# Stacked-layout aggregation — the O(m) reduction as one compiled program
+# ---------------------------------------------------------------------------
+def _sequential_weighted_sum(stacked, w):
+    """Σ w_l · lane_l reduced LEFT-TO-RIGHT — float-op order AND rounding
+    identical to `weighted_mean`'s host loop.
+
+    The weighted lanes are materialized first (one broadcast multiply, the
+    same per-element rounding as the reference's scalar multiplies) and the
+    `fori_loop` body then folds PURE adds: keeping the multiply out of the
+    loop body is what stops XLA contracting w_l·x_l + acc into an FMA,
+    which would silently break bitwise equality with the reference."""
+    lanes = jax.tree.leaves(stacked)[0].shape[0]
+    weighted = jax.tree.map(
+        lambda x: w.reshape((-1,) + (1,) * (x.ndim - 1))
+        * x.astype(jnp.float32), stacked)
+    acc = jax.tree.map(lambda x: x[0], weighted)
+
+    def body(i, acc):
+        return jax.tree.map(lambda a, x: a + x[i], acc, weighted)
+
+    return jax.lax.fori_loop(1, lanes, body, acc)
+
+
+def _pairwise_weighted_sum(stacked, w):
+    """Σ w_l · lane_l by balanced pairwise folding (O(log m) depth).
+
+    Different summation order than the sequential reference — opted into via
+    `sum_mode="pairwise"` for speed/accuracy at large m, documented as equal
+    to the reference only to float tolerance."""
+    def reduce_leaf(x):
+        y = w.reshape((-1,) + (1,) * (x.ndim - 1)) * x.astype(jnp.float32)
+        while y.shape[0] > 1:
+            even = (y.shape[0] // 2) * 2
+            folded = y[0:even:2] + y[1:even:2]
+            if even != y.shape[0]:
+                folded = jnp.concatenate([folded, y[even:]], axis=0)
+            y = folded
+        return y[0]
+
+    return jax.tree.map(reduce_leaf, stacked)
+
+
+@functools.lru_cache(maxsize=None)
+def _stacked_mean_fn(sum_mode: str):
+    """Compiled `(stacked, w) → Σ (w/Σw)_l · lane_l` — the fedavg/fedopt
+    reduction. XLA re-specializes per participant count (the leading axis
+    is a static shape), so partial-participation rounds compile once per
+    distinct size — same behavior as the cohort client programs."""
+    wsum = (_sequential_weighted_sum if sum_mode == "sequential"
+            else _pairwise_weighted_sum)
+    return jax.jit(lambda stacked, w: wsum(stacked, w / jnp.sum(w)))
+
+
+@functools.lru_cache(maxsize=None)
+def _stacked_memory_fn(has_slot_weights: bool):
+    """Compiled fedmem reduction: scatter the stacked lanes into the
+    per-client slots and reduce ALL slots to the step direction. The
+    scatter is exact and the slot mean / slot-weighted tensordot lower to
+    the same reduce ops as the reference's eager calls, so fedmem stays
+    bit-exact without a sum_mode distinction (its direction is a reduction
+    over the m_total memory slots, not a lane fold)."""
+    def fn(memory, stacked, idx, slot_w):
+        memory = jax.tree.map(
+            lambda m, d: m.at[idx].set(d.astype(jnp.float32)),
+            memory, stacked)
+        if has_slot_weights:
+            sw = slot_w / jnp.sum(slot_w)
+            direction = jax.tree.map(
+                lambda m: jnp.tensordot(sw, m, axes=1), memory)
+        else:
+            direction = jax.tree.map(lambda m: jnp.mean(m, axis=0), memory)
+        return memory, direction
+
+    return jax.jit(fn)
+
+
+def aggregate_stacked(state: ServerState, cfg: ServerConfig, stacked,
+                      weights,
+                      participant_ids: Optional[Sequence[int]] = None,
+                      slot_weights=None) -> ServerState:
+    """One server step from STACKED decoded deltas (lane l = participant l).
+
+    `stacked` is one device pytree whose leaves carry a leading participant
+    axis, in the same order as `weights` / `participant_ids` — exactly what
+    the cohort decode programs emit, so deltas never leave the device
+    between decode and the params update. Semantics match `aggregate` on
+    the unstacked lanes; with `cfg.sum_mode == "sequential"` the match is
+    bit-exact (same float summation order and rounding — regression-
+    tested), with "pairwise" it holds to float tolerance."""
+    lanes = jax.tree.leaves(stacked)[0].shape[0]
+    if lanes == 0:
+        return state
+    if np.asarray(weights).shape[0] != lanes:
+        raise ValueError(f"{np.asarray(weights).shape[0]} weights for "
+                         f"{lanes} stacked lanes")
+    w = jnp.asarray(np.asarray(weights), jnp.float32)
+
+    # weights only divide the fedavg/fedopt mean — fedmem ignores them (its
+    # direction comes from the slots), exactly as in the list reference
+    if cfg.aggregator == "fedavg":
+        _check_weights(weights)
+        mean = _stacked_mean_fn(cfg.sum_mode)(stacked, w)
+        return ServerState(_apply_delta(state.params, mean, cfg.server_lr),
+                           state.opt_state, state.memory)
+
+    if cfg.aggregator == "fedopt":
+        _check_weights(weights)
+        return _fedopt_tail(state, cfg,
+                            _stacked_mean_fn(cfg.sum_mode)(stacked, w))
+
+    if participant_ids is None:
+        raise ValueError("fedmem aggregation needs participant_ids")
+    idx = jnp.asarray(list(participant_ids), jnp.int32)
+    if slot_weights is not None:
+        _check_weights(slot_weights, "slot_weights")
+        slot_w = jnp.asarray(np.asarray(slot_weights), jnp.float32)
+    else:
+        slot_w = jnp.zeros((0,), jnp.float32)
+    memory, direction = _stacked_memory_fn(slot_weights is not None)(
+        state.memory, stacked, idx, slot_w)
+    return ServerState(_apply_delta(state.params, direction, cfg.server_lr),
+                       state.opt_state, memory)

@@ -95,6 +95,65 @@ def test_split_leaf_budgets_conserves_bits():
         budget.split_leaf_budgets(tree, 0.1, norms=norms, min_rate=0.125)
 
 
+@given(m=st.integers(2, 12), seed=st.integers(0, 200))
+@settings(max_examples=30, deadline=None)
+def test_quantize_rates_deficit_branch(m, seed):
+    """Raw rates ABOVE the target total exercise the deficit branch
+    (units < 0): grid steps must be taken away, never handed out, and the
+    result stays a feasible lattice allocation conserving the total."""
+    rng = np.random.default_rng(seed)
+    grid, lo, hi = 0.25, 0.25, 8.0
+    raw = rng.uniform(4.0, hi, m)                 # deliberately rich
+    total = float(np.clip(raw.sum() - rng.uniform(1.0, 2.0 * m),
+                          lo * m, hi * m))        # poorer target → deficit
+    q = budget.quantize_rates(raw, grid, total, lo, hi)
+    units = int(round(total / grid)) - int(np.floor(raw / grid + 1e-9).sum())
+    if units < 0:                                 # the branch under test
+        assert (q <= raw + grid + 1e-9).all()
+    assert q.sum() == pytest.approx(total, abs=grid)
+    assert all(lo - 1e-9 <= r <= hi + 1e-9 for r in q)
+    assert all(abs(r / grid - round(r / grid)) < 1e-9 for r in q)
+
+
+def test_quantize_rates_deficit_example():
+    """Everyone floor-snapped at the cap, target far below: whole steps are
+    removed by smallest fractional remainder, bounded at the lattice floor."""
+    q = budget.quantize_rates([8.0, 8.0, 8.0], 0.25, 6.0, 0.25, 8.0)
+    assert q.sum() == pytest.approx(6.0, abs=0.25)
+    assert (q >= 0.25 - 1e-9).all() and (q <= 8.0 + 1e-9).all()
+
+
+@given(m=st.integers(2, 12), avg=st.floats(0.5, 7.5),
+       seed=st.integers(0, 200))
+@settings(max_examples=30, deadline=None)
+def test_clip_renormalize_conserves_budget(m, seed, avg):
+    """_clip_renormalize: for any feasible total and any raw proportional
+    split, the output respects the [lo, hi] box and conserves Σ R_i —
+    including when clamping pushes mass BOTH ways."""
+    rng = np.random.default_rng(seed)
+    lo, hi = 0.125, 8.0
+    total = avg * m
+    raw = rng.uniform(0.0, 3.0, m)
+    raw = total * raw / raw.sum()                 # Σ raw == total, may violate box
+    out = budget._clip_renormalize(raw.copy(), total, lo, hi)
+    assert (out >= lo - 1e-9).all()
+    assert (out <= hi + 1e-9).all()
+    assert out.sum() == pytest.approx(total, rel=1e-9, abs=1e-9)
+
+
+def test_clip_renormalize_deficit_redistribution():
+    """A rate clamped DOWN at the cap frees budget that must flow to the
+    unclamped clients (and vice versa for the floor)."""
+    out = budget._clip_renormalize(np.array([10.0, 1.0, 1.0]), 12.0,
+                                   0.125, 8.0)
+    assert out[0] == pytest.approx(8.0)
+    assert out[1:].sum() == pytest.approx(4.0)
+    out2 = budget._clip_renormalize(np.array([0.01, 0.01, 7.98]), 8.0,
+                                    0.125, 8.0)
+    assert (out2[:2] >= 0.125 - 1e-9).all()
+    assert out2.sum() == pytest.approx(8.0)
+
+
 # ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
