@@ -1,0 +1,122 @@
+"""Mesh federation backend: lanes-per-device sweep with a bitwise gate.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+        PYTHONPATH=src python -m benchmarks.fed_mesh_scaling
+
+The claim under test is CORRECTNESS under placement, not CPU speed: the
+shard_map backend places cohort lanes on mesh devices (fed ∘ dist — each
+device runs local-SGD → encode → decode for its lane slice and the server
+reduce is a collective fold), and under `sum_mode="sequential"` it must be
+**bit-exact** with the single-device vmap cohort engine — params, EF
+memories, fedopt optimizer state and the byte ledger — for every lane
+count, divisible by the device axis or not. The sweep varies m (hence
+lanes/device and padding) and asserts the gate on every run; per-round
+wall-clock for both backends is reported so real multi-host runs have a
+baseline (on a virtual-device CPU host the mesh backend pays collective
+overhead for no parallel compute — the devices share one CPU — so parity
+< 1 here is expected and NOT asserted).
+
+When imported first (standalone or `benchmarks.run fed_mesh ...`) the module
+forces 2 virtual host devices before jax initializes; if another benchmark
+already initialized jax single-device, the run reports itself skipped
+rather than failing the whole bench lane.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+if "jax" not in sys.modules:       # only effective before jax initializes
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=2")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import print_table
+from benchmarks.fed_heterogeneous import make_problem
+from repro.dist.sharding import padded_lanes
+from repro.fed import (ClientConfig, FedConfig, Federation, ServerConfig,
+                       mesh as mesh_lib, registry)
+
+
+def _timed_rounds(fed: Federation, cfg: FedConfig, rounds: int) -> float:
+    """Seconds per round, excluding the round-0 compile."""
+    fed.run_round(cfg, 0)
+    t0 = time.perf_counter()
+    for t in range(1, rounds + 1):
+        fed.run_round(cfg, t)
+    return (time.perf_counter() - t0) / rounds
+
+
+def _assert_bitwise(fed_v: Federation, fed_m: Federation, m: int) -> None:
+    for name, a, b in (("params", fed_v.server.params, fed_m.server.params),
+                       ("opt_state", fed_v.server.opt_state,
+                        fed_m.server.opt_state)):
+        for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            if not np.array_equal(np.asarray(la), np.asarray(lb)):
+                raise AssertionError(
+                    f"mesh backend diverged from vmap on {name} at m={m}")
+    for sv, sm in zip(fed_v.states, fed_m.states):
+        for la, lb in zip(jax.tree.leaves(sv.ef), jax.tree.leaves(sm.ef)):
+            if not np.array_equal(np.asarray(la), np.asarray(lb)):
+                raise AssertionError(
+                    f"mesh backend diverged from vmap on EF at m={m}")
+
+
+def run(m_values=(6, 16, 64), dim: int = 96, per_client: int = 32,
+        rounds: int = 4, chunk: int = 64, seed: int = 0) -> dict:
+    devices = jax.device_count()
+    if devices < 2:
+        print("[fed_mesh] skipped: needs ≥ 2 devices (set XLA_FLAGS="
+              "--xla_force_host_platform_device_count=2 before jax "
+              f"initializes), have {devices}")
+        return {"skipped": f"single device (have {devices})"}
+    mesh = mesh_lib.default_mesh()
+    rows, per_m = [], {}
+    for m in m_values:
+        shards, loss_fn, _, _, lr = make_problem(
+            m, dim, per_client=per_client, scale_span=0.0, seed=seed)
+        params = {"x": jnp.zeros(dim)}
+        codec = registry.make("ndsc", budget=2.0, chunk=chunk)
+        ccfg = ClientConfig(local_steps=1, lr=lr)
+        cfg = FedConfig(num_rounds=rounds + 1, seed=seed)
+
+        feds, times, ledgers = {}, {}, {}
+        for backend in ("vmap", "mesh"):
+            fed = Federation(loss_fn, params, shards, codec, ccfg,
+                             ServerConfig(), seed=seed, backend=backend,
+                             mesh=mesh if backend == "mesh" else None)
+            times[backend] = _timed_rounds(fed, cfg, rounds)
+            ledgers[backend] = fed.run_round(cfg, rounds + 1)["wire_bytes"]
+            feds[backend] = fed
+        assert ledgers["mesh"] == ledgers["vmap"], "mesh ledger diverged"
+        _assert_bitwise(feds["vmap"], feds["mesh"], m)
+        lanes = padded_lanes(m, devices)
+        per_m[m] = {"lanes_per_device": lanes // devices,
+                    "padded": lanes - m,
+                    "vmap_ms": times["vmap"] * 1e3,
+                    "mesh_ms": times["mesh"] * 1e3,
+                    "parity": times["vmap"] / times["mesh"]}
+        rows.append([m, devices, lanes // devices, lanes - m,
+                     f"{times['vmap'] * 1e3:.1f}",
+                     f"{times['mesh'] * 1e3:.1f}",
+                     f"{per_m[m]['parity']:.2f}×", "✓"])
+    print_table(
+        f"fed mesh backend: ms/round, vmap vs shard_map lanes-on-devices "
+        f"(dim={dim}, ndsc R=2, {devices} host devices, bitwise gate "
+        f"asserted per run)",
+        ["m", "devices", "lanes/dev", "pad", "vmap", "mesh", "parity",
+         "bitwise"], rows)
+    return {"devices": devices,
+            "bitwise": True,
+            "per_m": {str(m): {k: (round(v, 3) if isinstance(v, float)
+                                   else v)
+                               for k, v in rec.items()}
+                      for m, rec in per_m.items()}}
+
+
+if __name__ == "__main__":
+    run()

@@ -29,6 +29,7 @@ ALL = {
     "fed": "fed_heterogeneous",
     "fed_agg": "fed_aggregate_scaling",
     "fed_cohort": "fed_cohort_scaling",
+    "fed_mesh": "fed_mesh_scaling",
     "table1": "table1_compressors",
     "fig1a": "fig1a_compression_error",
     "fig1b": "fig1b_dgddef_rate",
@@ -49,6 +50,8 @@ TINY = {
     "fed_agg": dict(m_values=(8, 64), dim=256, reps=3),
     "fed_cohort": dict(m_values=(8, 32), dim=48, per_client=16, rounds=3,
                        adaptive_m=8, adaptive_rounds=25),
+    "fed_mesh": dict(m_values=(3, 8), dim=48, per_client=16, rounds=2,
+                     chunk=32),
     "table1": dict(n=256, trials=5),
     "fig1c": dict(dims=(128, 256, 512)),
 }

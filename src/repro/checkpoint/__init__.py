@@ -1,2 +1,4 @@
-"""npz + manifest checkpointing for arbitrary pytrees."""
-from repro.checkpoint.ckpt import save_checkpoint, restore_checkpoint, latest_step
+"""npz + manifest checkpointing for arbitrary pytrees (+ full Federations)."""
+from repro.checkpoint.ckpt import (federation_state, latest_step,
+                                   restore_checkpoint, restore_federation,
+                                   save_checkpoint, save_federation)

@@ -6,6 +6,14 @@ The manifest stores the flattened key paths and dtypes so restore rebuilds
 the exact pytree structure (dicts, tuples, NamedTuples via treedef string
 matching against a caller-provided template). Restore requires a `like`
 template pytree — this keeps the format dependency-free and safe (no pickle).
+
+`save_federation` / `restore_federation` capture a FULL `repro.fed`
+Federation — server params, fedopt optimizer state, fedmem memory, every
+client's error-feedback tree, PRNG lane (as raw key data) and participation
+counter, the adaptive allocator's `NormEMA` + current rates, and the round
+counter — so a restored federation continues with the same round indices
+(hence the same participant draws, codec salts and re-allocation
+boundaries) as an uninterrupted run, bit for bit (regression-tested).
 """
 from __future__ import annotations
 
@@ -15,6 +23,7 @@ import re
 from typing import Any, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -63,6 +72,92 @@ def restore_checkpoint(directory: str, like: Any,
     leaves = [np.asarray(a).astype(np.asarray(t).dtype)
               for a, t in zip(flat, like_flat)]
     return jax.tree.unflatten(treedef, leaves), step
+
+
+# ---------------------------------------------------------------------------
+# Federation state (repro.fed) — everything a resumed run needs, bit-exact
+# ---------------------------------------------------------------------------
+def federation_state(fed) -> dict:
+    """One pytree of plain arrays capturing a `repro.fed.Federation`.
+
+    Typed PRNG keys are stored as their raw uint32 key data (npz can't hold
+    extended dtypes); shapes/dtypes mirror the live federation, so the tree
+    doubles as the `like` template on restore. Codecs, data shards and
+    compiled-program caches are NOT state: they are reconstructed by
+    building the federation with the same constructor arguments (the
+    adaptive rates saved here rebuild the codecs via `set_rates`)."""
+    import jax.random as jrandom
+
+    tree = {
+        "server": {"params": fed.server.params,
+                   "opt_state": fed.server.opt_state,
+                   "memory": fed.server.memory},
+        "clients": {
+            "ef": [s.ef for s in fed.states],
+            "key_data": [jrandom.key_data(s.key) for s in fed.states],
+            "rounds_seen": [s.rounds_seen for s in fed.states],
+        },
+        "round": np.asarray(fed.rounds_done, np.int64),
+    }
+    if fed._ema is not None:
+        tree["ema"] = {"norms": fed._ema.norms, "seen": fed._ema.seen,
+                       "rates": np.asarray(fed._rates, np.float64)}
+    return tree
+
+
+def save_federation(directory: str, fed, step: Optional[int] = None) -> str:
+    """Checkpoint `fed` at `directory/step_<rounds_done>/` (or `step`)."""
+    at = fed.rounds_done if step is None else step
+    return save_checkpoint(directory, at, federation_state(fed))
+
+
+def restore_federation(directory: str, fed,
+                       step: Optional[int] = None) -> int:
+    """Restore a checkpoint into `fed` IN PLACE; returns the restored step.
+
+    `fed` must be constructed with the same arguments as the saved
+    federation (same model/clients/aggregator — the manifest's key paths
+    are checked against it). After this call `fed.run(cfg)` continues from
+    the saved round counter, bit-exact with a run that never stopped."""
+    import jax.random as jrandom
+
+    from repro.fed.clients import ClientState
+
+    tree, at = restore_checkpoint(directory, federation_state(fed), step)
+    server = fed.server
+    fed.server = type(server)(
+        params=jax.tree.map(jnp_asarray_like, tree["server"]["params"],
+                            server.params),
+        opt_state=jax.tree.map(jnp_asarray_like, tree["server"]["opt_state"],
+                               server.opt_state),
+        memory=jax.tree.map(jnp_asarray_like, tree["server"]["memory"],
+                            server.memory))
+    fed.rounds_done = int(tree["round"])
+    if fed._ema is not None:
+        # adopt the saved rates FIRST (rebuilds codecs via the factory;
+        # previously seen rates reuse their compiled programs), then the
+        # allocator's EMA state
+        fed.set_rates(tree["ema"]["rates"].tolist())
+        fed._ema.norms = np.asarray(tree["ema"]["norms"], np.float64)
+        fed._ema.seen = np.asarray(tree["ema"]["seen"], bool)
+    c = tree["clients"]
+    fed.states = [
+        ClientState(
+            ef=jax.tree.map(jnp_asarray_like, c["ef"][i],
+                            fed.states[i].ef),
+            key=jrandom.wrap_key_data(
+                jnp.asarray(c["key_data"][i], np.uint32)),
+            rounds_seen=jnp.asarray(c["rounds_seen"][i], np.int32))
+        for i in range(len(fed.states))]
+    return at
+
+
+def jnp_asarray_like(x, like):
+    """numpy leaf → device array with the template's dtype (bit-preserving:
+    restore_checkpoint already cast to the saved dtype). Reads `.dtype`
+    directly — valid on numpy and jax arrays alike — so the live template
+    never crosses device→host just to be overwritten."""
+    return jnp.asarray(x, like.dtype)
 
 
 def latest_step(directory: str) -> Optional[int]:

@@ -94,9 +94,54 @@ def param_specs(params, model_axis: int):
     return jax.tree_util.tree_map_with_path(visit, params)
 
 
+def data_axis_names(mesh) -> tuple:
+    """The data-parallel mesh axes, in major→minor order.
+
+    Shared by the consensus train steps (one worker per data-axis device)
+    and the federated mesh backend (cohort lanes placed over the same axes).
+    """
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def num_workers(mesh) -> int:
+    """Devices along the data axes — workers for repro.dist, lane slots per
+    stacked-pytree shard for repro.fed.mesh."""
+    return math.prod(mesh.shape[a] for a in data_axis_names(mesh))
+
+
+def lane_pspec(mesh):
+    """PartitionSpec prefix sharding a leading cohort-lane axis over the data
+    axes (the stacked-pytree layout of repro.fed placed on devices). Usable
+    as a shard_map in/out spec prefix for whole stacked pytrees."""
+    axes = data_axis_names(mesh)
+    if not axes:
+        return P()
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+def padded_lanes(n: int, axis_size: int) -> int:
+    """Lane count a stacked cohort pytree is padded to before it shards
+    evenly over `axis_size` devices (padding lanes carry zero weight
+    downstream).
+
+    Beyond divisibility, every device's slice is kept at ≥ 2 lanes: XLA
+    canonicalizes a batch-1 `vmap` body (e.g. squeezing the batch dim out of
+    dot_generals) into DIFFERENT reduction orders than the same body at
+    batch ≥ 2, so a device holding a single lane would break the bitwise
+    contract with the single-device cohort engine. Batches 2, 3, … lower
+    identically per lane (empirically, and regression-tested); only the
+    1-lane program is special-cased by the compiler. A 1-device "mesh"
+    (axis_size == 1) needs no padding at all — it IS the vmap layout."""
+    if axis_size <= 0:
+        raise ValueError("axis_size must be positive")
+    if axis_size == 1:
+        return max(n, 1)
+    return axis_size * max(2, -(-max(n, 1) // axis_size))
+
+
 def data_axes_for(global_batch: int, mesh) -> tuple:
     """The mesh axes the batch dim shards over (largest divisible prefix)."""
-    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    axes = data_axis_names(mesh)
     while axes and global_batch % math.prod(mesh.shape[a] for a in axes):
         axes = axes[1:]
     return axes

@@ -28,7 +28,6 @@ worker's OWN payload, so EF never needs extra communication.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
@@ -37,19 +36,12 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 from repro.dist import gradcomp as G
 from repro.dist import zero as zero_lib
-from repro.dist.sharding import data_axes_for, param_specs
+from repro.dist.sharding import (data_axes_for, data_axis_names, num_workers,
+                                 param_specs)
 from repro.models import decode as decode_lib
 from repro.models import model as model_lib
 from repro.optimizer.optim import (apply_updates, clip_by_global_norm,
                                    global_norm)
-
-
-def data_axis_names(mesh) -> tuple:
-    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-
-
-def num_workers(mesh) -> int:
-    return math.prod(mesh.shape[a] for a in data_axis_names(mesh))
 
 
 def _model_axis(mesh) -> int:

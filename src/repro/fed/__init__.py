@@ -19,9 +19,11 @@ from repro.fed.budget import AdaptiveConfig, NormEMA
 from repro.fed.clients import (ClientConfig, ClientState, concat_stacks,
                                data_signature, init_client_state, local_sgd,
                                make_client_round, make_cohort_round,
-                               stack_trees, unstack_tree)
+                               stack_padded, stack_trees, unstack_tree)
+from repro.fed.mesh import (aggregate_stacked_mesh, default_mesh,
+                            make_mesh_cohort_round, mesh_weighted_mean)
 from repro.fed.registry import TreeCodec, available, codec_spec, make
-from repro.fed.rounds import (FedConfig, Federation, cohort_key,
+from repro.fed.rounds import (BACKENDS, FedConfig, Federation, cohort_key,
                               partition_cohorts)
 from repro.fed.server import (AGGREGATORS, SUM_MODES, ServerConfig,
                               ServerState, aggregate, aggregate_stacked,
@@ -29,12 +31,14 @@ from repro.fed.server import (AGGREGATORS, SUM_MODES, ServerConfig,
                               stacked_norms, tree_norm)
 
 __all__ = [
-    "AGGREGATORS", "AdaptiveConfig", "ClientConfig", "ClientState",
-    "FedConfig", "Federation", "NormEMA", "SUM_MODES", "ServerConfig",
-    "ServerState", "TreeCodec", "aggregate", "aggregate_stacked",
-    "available", "budget", "codec_spec", "cohort_key", "concat_stacks",
-    "data_signature", "decode_deltas", "delta_norms", "init_client_state",
+    "AGGREGATORS", "AdaptiveConfig", "BACKENDS", "ClientConfig",
+    "ClientState", "FedConfig", "Federation", "NormEMA", "SUM_MODES",
+    "ServerConfig", "ServerState", "TreeCodec", "aggregate",
+    "aggregate_stacked", "aggregate_stacked_mesh", "available", "budget",
+    "codec_spec", "cohort_key", "concat_stacks", "data_signature",
+    "decode_deltas", "default_mesh", "delta_norms", "init_client_state",
     "init_server", "local_sgd", "make", "make_client_round",
-    "make_cohort_round", "partition_cohorts", "registry", "stack_trees",
+    "make_cohort_round", "make_mesh_cohort_round", "mesh_weighted_mean",
+    "partition_cohorts", "registry", "stack_padded", "stack_trees",
     "stacked_norms", "tree_norm", "unstack_tree",
 ]

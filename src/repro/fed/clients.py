@@ -137,6 +137,20 @@ def stack_trees(trees):
     return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
 
 
+def stack_padded(trees, total: int):
+    """`stack_trees` padded to `total` lanes by repeating the FIRST tree.
+
+    The mesh backend shards stacked cohort pytrees over the data axes, which
+    needs the lane count divisible by the axis size; padding with a copy of
+    a REAL lane keeps every lane runnable (finite data, a valid PRNG key —
+    the duplicated key is harmless because padded-lane outputs are always
+    discarded / zero-weighted downstream). Real lanes come first, so
+    `lane[:len(trees)]` of any stacked output recovers the true cohort."""
+    if total < len(trees):
+        raise ValueError(f"cannot pad {len(trees)} lanes down to {total}")
+    return stack_trees(list(trees) + [trees[0]] * (total - len(trees)))
+
+
 def unstack_tree(tree, m: int) -> list:
     """Inverse of `stack_trees`: lane i of every leaf, as m pytrees."""
     return [jax.tree.map(lambda a, i=i: a[i], tree) for i in range(m)]

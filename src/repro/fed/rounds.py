@@ -20,6 +20,13 @@ global delta are bit-exact between them (regression-tested); the wire ledger
 stays byte-exact because it sums the per-lane `codec.wire_bytes` audits of
 each cohort.
 
+Backend selection (`Federation(backend=...)`): "vmap" runs every cohort's
+lanes on one device; "mesh" shards the stacked cohort pytrees over the mesh
+data axes via `repro.fed.mesh` — each device runs its lane slice (local SGD
+→ encode → decode) under shard_map and the server reduce becomes a
+collective fold, bit-exact with "vmap" under `sum_mode="sequential"` even
+when the lane count doesn't divide the axis size (zero-weight padding).
+
 Adaptive budget re-allocation: with `adaptive=AdaptiveConfig(...)` the driver
 re-runs `budget.allocate` every `realloc_every` rounds from the EMA of the
 decoded delta norms the server already holds (no extra communication),
@@ -63,7 +70,10 @@ import numpy as np
 
 from repro.fed import budget as budget_lib
 from repro.fed import clients as clients_lib
+from repro.fed import mesh as mesh_lib
 from repro.fed import server as server_lib
+
+BACKENDS = ("vmap", "mesh")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,6 +140,19 @@ class Federation:
     cohort engine is regression-tested against). `adaptive` + `codec_factory`
     (rate → TreeCodec) turn on adaptive budget re-allocation; the initial
     codecs' `.rate` attributes seed the allocation state.
+
+    `backend` picks where cohort lanes execute:
+
+      "vmap"  (default) all lanes of a cohort on one device, one vmapped
+              program — the PR-3/4 engine.
+      "mesh"  lanes sharded over the data axes of `mesh` (every visible
+              device when None): each device runs its lane slice manually
+              under shard_map and the server reduce runs as a collective
+              fold (`repro.fed.mesh`). Bit-exact with "vmap" under
+              `sum_mode="sequential"`, including lane counts not divisible
+              by the axis size (zero-weight padding lanes). Requires
+              `use_cohorts=True`; singleton / spec-less clients still fall
+              back to the scalar path, exactly as under "vmap".
     """
 
     def __init__(self, loss_fn: Callable, params, datas: Sequence,
@@ -137,8 +160,18 @@ class Federation:
                  server_cfg: server_lib.ServerConfig = None, seed: int = 0,
                  use_cohorts: bool = True,
                  adaptive: Optional[budget_lib.AdaptiveConfig] = None,
-                 codec_factory: Optional[Callable] = None):
+                 codec_factory: Optional[Callable] = None,
+                 backend: str = "vmap", mesh=None):
         m = len(datas)
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, "
+                             f"got {backend!r}")
+        if backend == "mesh" and not use_cohorts:
+            raise ValueError('backend="mesh" places cohort lanes on devices '
+                             "— it requires use_cohorts=True")
+        self.backend = backend
+        self.mesh = (mesh if mesh is not None else mesh_lib.default_mesh()) \
+            if backend == "mesh" else None
         self.loss_fn = loss_fn
         self.datas = list(datas)
         if client_cfgs is None:
@@ -181,6 +214,8 @@ class Federation:
         self._decode_fns: dict = {}    # spec key -> scalar decode+norm fn
         self._audit_bits: dict = {}    # spec key -> analytic wire_bits
         self._stacked_data: dict = {}  # cohort key -> (members, stacked)
+        self._mesh_fns: dict = {}      # cohort key -> mesh round program
+        self.rounds_done = 0           # rounds driven by run() (ckpt resume)
         self._install_codecs(codecs)
 
     # -- codec tables --------------------------------------------------------
@@ -312,33 +347,17 @@ class Federation:
              for i in participants])
         for key, members in parts:
             if key is not None and len(members) > 1:
-                fn = self._cohort_fns.get(key)
-                if fn is None:
-                    i0 = members[0]
-                    fn = clients_lib.make_cohort_round(
-                        self.loss_fn, self.codecs[i0], self.client_cfgs[i0],
-                        self.server.params)
-                    self._cohort_fns[key] = fn
-                # shards never change, so the stack is reusable whenever the
-                # cohort's membership repeats (always, at full
-                # participation); one cached entry per cohort key bounds the
-                # memory at one stacked copy of each cohort's data
-                mtuple = tuple(members)
-                cached = self._stacked_data.get(key)
-                if cached is not None and cached[0] == mtuple:
-                    data = cached[1]
+                if self.backend == "mesh":
+                    wires, new_states, decoded, norms = self._run_cohort_mesh(
+                        key, members, round_idx)
                 else:
-                    data = clients_lib.stack_trees(
-                        [self.datas[i] for i in members])
-                    self._stacked_data[key] = (mtuple, data)
-                state = clients_lib.stack_trees(
-                    [self.states[i] for i in members])
-                wires, new_states = fn(self.server.params, data, state,
-                                       round_idx)
-                decoded, norms = self._cohort_decode(key, members[0])(wires)
+                    wires, new_states, decoded, norms = self._run_cohort_vmap(
+                        key, members, round_idx)
                 # one device→host transfer for everything except the PRNG
                 # lanes (typed key arrays can't cross into numpy); per-lane
-                # numpy views are free, per-lane device slices are not
+                # numpy views are free, per-lane device slices are not.
+                # Mesh-backend stacks carry padding lanes past len(members);
+                # only the real lanes are unstacked back into client state.
                 h_wires, h_ef, h_seen = jax.device_get(
                     (wires, new_states.ef, new_states.rounds_seen))
                 keys = new_states.key
@@ -359,6 +378,68 @@ class Federation:
                     decoded1, norm1 = self._scalar_decode(i)(wires_of[i])
                     groups.append(([i], decoded1, norm1))
         return wires_of, groups
+
+    def _run_cohort_vmap(self, key, members: Sequence[int], round_idx: int):
+        """One cohort on one device: the PR-3 vmapped round + PR-4 decode."""
+        fn = self._cohort_fns.get(key)
+        if fn is None:
+            i0 = members[0]
+            fn = clients_lib.make_cohort_round(
+                self.loss_fn, self.codecs[i0], self.client_cfgs[i0],
+                self.server.params)
+            self._cohort_fns[key] = fn
+        # shards never change, so the stack is reusable whenever the
+        # cohort's membership repeats (always, at full participation); one
+        # cached entry per cohort key bounds the memory at one stacked copy
+        # of each cohort's data
+        mtuple = tuple(members)
+        cached = self._stacked_data.get(key)
+        if cached is not None and cached[0] == mtuple:
+            data = cached[1]
+        else:
+            data = clients_lib.stack_trees([self.datas[i] for i in members])
+            self._stacked_data[key] = (mtuple, data)
+        state = clients_lib.stack_trees([self.states[i] for i in members])
+        wires, new_states = fn(self.server.params, data, state, round_idx)
+        decoded, norms = self._cohort_decode(key, members[0])(wires)
+        return wires, new_states, decoded, norms
+
+    def _run_cohort_mesh(self, key, members: Sequence[int], round_idx: int):
+        """One cohort with its lanes sharded over the mesh data axes.
+
+        The stacked data/state are padded to the axis size by repeating lane
+        0 (`clients.stack_padded`) so the shard_map program sees an even
+        split. Wires, states and norms come back sliced to the real lanes
+        (the padded tail never reaches the ledger, the client states or the
+        EMA) — but the m×L-sized DECODED stack keeps its padding and stays
+        lane-sharded, so the single-cohort fast path in `run_round` can
+        feed it to the collective fold without a reshard; the padding is
+        zero-weighted / sliced off there."""
+        n = len(members)
+        total = mesh_lib.padded_lanes(n, mesh_lib.lane_axis_size(self.mesh))
+        fn = self._mesh_fns.get(key)
+        if fn is None:
+            i0 = members[0]
+            fn = mesh_lib.make_mesh_cohort_round(
+                self.loss_fn, self.codecs[i0], self.client_cfgs[i0],
+                self.server.params, self.mesh)
+            self._mesh_fns[key] = fn
+        mtuple = (tuple(members), total)
+        cached = self._stacked_data.get(key)
+        if cached is not None and cached[0] == mtuple:
+            data = cached[1]
+        else:
+            data = clients_lib.stack_padded(
+                [self.datas[i] for i in members], total)
+            self._stacked_data[key] = (mtuple, data)
+        state = clients_lib.stack_padded(
+            [self.states[i] for i in members], total)
+        wires, new_states, decoded, norms = fn(self.server.params, data,
+                                               state, round_idx)
+        if total != n:
+            wires = jax.tree.map(lambda a: a[:n], wires)
+            new_states = jax.tree.map(lambda a: a[:n], new_states)
+        return wires, new_states, decoded, norms[:n]
 
     @staticmethod
     def _combine_groups(groups: Sequence, participants: Sequence[int]):
@@ -391,15 +472,41 @@ class Federation:
             slot_weights = (self._weights(cfg, range(self.num_clients))
                             if (self.server_cfg.aggregator == "fedmem"
                                 and cfg.weighting != "uniform") else None)
-            if self.use_cohorts:
+            if (self.backend == "mesh" and self.use_cohorts
+                    and len(groups) == 1
+                    and groups[0][0] == list(participants)):
+                # single-cohort fast path (the whole round is one mesh
+                # program, e.g. full participation of a homogeneous
+                # population): the padded, lane-sharded decoded stack feeds
+                # the collective fold directly — no slice, no reshard
+                members, padded, norms = groups[0]
+                if self._ema is not None:
+                    self._ema.update(members, np.asarray(
+                        jax.device_get(norms), np.float64))
+                self.server = mesh_lib.aggregate_stacked_mesh(
+                    self.server, self.server_cfg, padded, weights,
+                    self.mesh, participants, slot_weights=slot_weights,
+                    lanes=len(participants))
+            elif self.use_cohorts:
+                if self.backend == "mesh":
+                    # multi-group join: strip each mesh cohort's padding
+                    # before the concat + participant-order gather
+                    groups = [(mem, jax.tree.map(
+                        lambda a, k=len(mem): a[:k], dec), nr)
+                        for mem, dec, nr in groups]
                 stacked, order, norms = self._combine_groups(groups,
                                                              participants)
                 if self._ema is not None:
                     self._ema.update(order, np.asarray(
                         jax.device_get(norms), np.float64))
-                self.server = server_lib.aggregate_stacked(
-                    self.server, self.server_cfg, stacked, weights,
-                    participants, slot_weights=slot_weights)
+                if self.backend == "mesh":
+                    self.server = mesh_lib.aggregate_stacked_mesh(
+                        self.server, self.server_cfg, stacked, weights,
+                        self.mesh, participants, slot_weights=slot_weights)
+                else:
+                    self.server = server_lib.aggregate_stacked(
+                        self.server, self.server_cfg, stacked, weights,
+                        participants, slot_weights=slot_weights)
             else:
                 # PR-2 list-layout reference: per-participant trees, host
                 # reduction loop (the oracle the stacked path is tested
@@ -430,6 +537,12 @@ class Federation:
             eval_fn: Optional[Callable[[Any], float]] = None) -> dict:
         """Drive `cfg.num_rounds` rounds; returns the per-round history.
 
+        Rounds start at `self.rounds_done` (0 on a fresh federation), so a
+        federation restored from `repro.checkpoint.restore_federation`
+        continues with the SAME round indices — and hence the same
+        participant draws, codec salts and re-allocation boundaries — as an
+        uninterrupted run (bit-exact, regression-tested).
+
         history keys: round, loss (if eval_fn), wire_bytes, analytic_bytes,
         cum_bytes, participants, stragglers, realloc, rates.
         """
@@ -438,8 +551,10 @@ class Federation:
                                 "participants", "stragglers", "realloc",
                                 "rates")}
         cum = 0.0
-        for t in range(cfg.num_rounds):
+        start = self.rounds_done
+        for t in range(start, start + cfg.num_rounds):
             rec = self.run_round(cfg, t)
+            self.rounds_done = t + 1
             cum += rec["wire_bytes"]
             hist["round"].append(t)
             hist["wire_bytes"].append(rec["wire_bytes"])

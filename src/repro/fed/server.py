@@ -139,8 +139,19 @@ def delta_norms(deltas: Sequence) -> list:
 def _check_weights(weights, what: str = "weights") -> None:
     """Weight sums divide the aggregate: a non-positive (or NaN) sum would
     silently poison the params, e.g. `weighting="data_size"` over empty
-    shards. Fail loudly instead."""
-    total = float(np.sum(np.asarray(jax.device_get(weights), np.float64)))
+    shards. Fail loudly instead.
+
+    Individual weights of EXACTLY 0 are allowed — that is the mesh backend's
+    padding contract (lanes padding a cohort stack up to the device-axis
+    size carry weight 0 and must contribute nothing) — but negative or
+    non-finite entries are rejected: they can cancel inside the sum and
+    poison the mean while the total still looks sane."""
+    w = np.asarray(jax.device_get(weights), np.float64)
+    if w.size and (not np.all(np.isfinite(w)) or np.any(w < 0.0)):
+        raise ValueError(
+            f"{what} must be finite and non-negative with a positive sum "
+            f"(exact zeros are allowed, e.g. padding lanes), got {w.tolist()}")
+    total = float(np.sum(w))
     if not (total > 0.0 and math.isfinite(total)):
         raise ValueError(
             f"{what} must have a positive finite sum, got {total} — with "

@@ -2,7 +2,9 @@
 
 Defined as FUNCTIONS (not module-level constants) so importing this module
 never touches jax device state — the dry-run must set XLA_FLAGS before any
-jax initialization, and tests/benches must keep seeing 1 device.
+jax initialization, and every process must control its own device count
+(tests force 4 virtual host devices in conftest for the fed mesh backend;
+the bench-smoke lane forces 2; plain scripts see the 1 physical device).
 """
 from __future__ import annotations
 

@@ -1,8 +1,17 @@
 import os
 import sys
 
-# tests must see exactly ONE device (the dry-run sets 512 in its own process)
-os.environ.pop("XLA_FLAGS", None)
+# The mesh-backend tests place cohort lanes on devices, so the suite runs
+# with a few VIRTUAL host devices — forced here, before any jax import, via
+# the only mechanism XLA offers (the dry-run sets its own 512 in a
+# subprocess the same way). Any inherited XLA_FLAGS are dropped first: tests
+# must see a deterministic device count, not whatever the shell had.
+# REPRO_TEST_DEVICES=1 restores the historical single-device behavior (the
+# mesh-parametrized fixtures then skip cleanly, as on single-device
+# runners).
+_DEVICES = os.environ.get("REPRO_TEST_DEVICES", "4")
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={_DEVICES}")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -27,3 +36,17 @@ from repro.launch.mesh import make_host_mesh  # noqa: E402
 def mesh():
     """The shared 1×1 ("data","model") host mesh every dist test runs on."""
     return make_host_mesh(data=1, model=1)
+
+
+@pytest.fixture(scope="session", params=[2, 4],
+                ids=lambda n: f"{n}dev")
+def data_mesh(request):
+    """Host mesh with `param` devices on the data axis, parametrized over 2
+    and 4 so mesh-backend tests exercise both even and UNEVEN lane splits
+    (a 6-lane cohort pads to 8 on 4 devices but not on 2, etc.). Skips
+    cleanly when the process has fewer devices — single-device runners, or
+    REPRO_TEST_DEVICES=1."""
+    if jax.device_count() < request.param:
+        pytest.skip(f"needs {request.param} devices, "
+                    f"have {jax.device_count()}")
+    return make_host_mesh(data=request.param, model=1)

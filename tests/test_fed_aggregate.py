@@ -322,3 +322,69 @@ def test_specless_codec_round_trip():
     hist = fed.run(FedConfig(num_rounds=2))
     assert hist["wire_bytes"] == hist["analytic_bytes"]
     assert len(fed._audit_bits) == 1       # keyed by the codec object
+
+
+# ---------------------------------------------------------------------------
+# the mesh padding contract: zero-weight lanes are admitted and inert
+# ---------------------------------------------------------------------------
+def test_zero_weight_padding_lanes_are_inert():
+    """aggregate_stacked with trailing zero-weight lanes (the mesh backend's
+    padding layout) passes the weight guard and produces the SAME result as
+    the unpadded stack — sequential mode bitwise, pairwise to tolerance."""
+    key = jax.random.key(4)
+    lanes, pads = 5, 3
+    real = _random_tree(key, lanes=lanes)
+    junk = _random_tree(jax.random.fold_in(key, 1), lanes=pads)
+    padded = jax.tree.map(lambda a, b: jnp.concatenate([a, b]), real, junk)
+    w = np.random.default_rng(7).uniform(0.5, 2.0, lanes)
+    w_padded = np.concatenate([w, np.zeros(pads)])
+    params = _random_tree(jax.random.fold_in(key, 2))
+    for sum_mode in ("sequential", "pairwise"):
+        cfg = ServerConfig(sum_mode=sum_mode)
+        state = server_lib.init_server(params, cfg, lanes + pads)
+        ref = server_lib.aggregate_stacked(state, cfg, real, w)
+        got = server_lib.aggregate_stacked(state, cfg, padded, w_padded)
+        for rl, gl in zip(jax.tree.leaves(ref.params),
+                          jax.tree.leaves(got.params)):
+            if sum_mode == "sequential":
+                np.testing.assert_array_equal(np.asarray(rl), np.asarray(gl))
+            else:
+                np.testing.assert_allclose(np.asarray(rl), np.asarray(gl),
+                                           rtol=1e-6)
+
+
+def test_weight_guard_rejects_negative_and_nonfinite_entries():
+    """Exact zeros pass (padding lanes); anything negative or non-finite is
+    poison even when the SUM still looks positive."""
+    deltas = [{"x": jnp.ones(4)}, {"x": jnp.ones(4)}]
+    server_lib._check_weights(np.array([1.0, 0.0]))            # zeros OK
+    for bad in (np.array([2.0, -1.0]),       # positive sum, negative entry
+                np.array([1.0, np.nan]),
+                np.array([1.0, np.inf])):
+        with pytest.raises(ValueError, match="non-negative|positive"):
+            server_lib.weighted_mean(deltas, bad)
+
+
+def test_concat_stacks_perm_drops_padded_lanes():
+    """concat_stacks' gather permutation can SELECT lanes, not just reorder
+    them: stacks with trailing padding join into a real-lanes-only result.
+    (The driver's mesh join slices padding off before concat — this pins
+    down that the perm itself is also a safe way to drop lanes, so zero
+    lanes can never leak into an aggregate through it.)"""
+    import repro.fed.clients as clients_lib
+
+    def tree(v, lanes):
+        return {"x": jnp.full((lanes, 3), float(v))}
+
+    # cohort A: lanes 0..2 real (clients 4,1,2), one pad; cohort B: lanes
+    # 0..1 real (clients 3,0), two pads
+    a = jax.tree.map(lambda *xs: jnp.concatenate(xs),
+                     tree(4, 1), tree(1, 1), tree(2, 1), tree(-99, 1))
+    b = jax.tree.map(lambda *xs: jnp.concatenate(xs),
+                     tree(3, 1), tree(0, 1), tree(-77, 2))
+    # participant order 0..4; global lane layout [A(4 lanes), B(4 lanes)]
+    perm = [5, 1, 2, 4, 0]     # client i at global lane perm[i]
+    joined = clients_lib.concat_stacks([a, b], perm)
+    np.testing.assert_array_equal(np.asarray(joined["x"][:, 0]),
+                                  [0.0, 1.0, 2.0, 3.0, 4.0])
+    assert joined["x"].shape[0] == 5       # pads dropped by the gather

@@ -1,0 +1,206 @@
+"""Mesh federation backend: lane placement, padding, bit-exactness with the
+vmap cohort engine, collective folds, straggler-dropout ledger accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist.sharding import lane_pspec, padded_lanes
+from repro.fed import (ClientConfig, FedConfig, Federation, ServerConfig,
+                       clients as clients_lib, mesh as mesh_lib, registry,
+                       server as server_lib)
+from repro.optimizer import sgd
+
+
+def _mixed_population(seed=0):
+    """m=6: a 3-lane ndsc cohort, a 2-lane sub-linear cohort and an identity
+    singleton with a different shard shape — cohort sizes 3 and 2 never
+    divide a 2- or 4-device axis, so every mesh round exercises padding."""
+    ka, kx = jax.random.split(jax.random.key(seed))
+    m, dim, n = 6, 48, 64
+    a = jax.random.normal(ka, (m, n, dim)) / jnp.sqrt(n)
+    x_true = jax.random.normal(kx, (dim,))
+    shards = [{"a": a[i], "b": a[i] @ x_true} for i in range(m)]
+    shards[5] = {"a": a[5][:32], "b": (a[5] @ x_true)[:32]}
+
+    def loss_fn(p, batch):
+        r = batch["a"] @ p["x"] - batch["b"]
+        return 0.5 * jnp.mean(r * r)
+
+    codecs = ([registry.make("ndsc", budget=2.0, chunk=32) for _ in range(3)]
+              + [registry.make("ndsc", budget=0.75, chunk=32)
+                 for _ in range(2)]
+              + [registry.make("identity")])
+    return loss_fn, {"x": jnp.zeros(dim)}, shards, codecs
+
+
+def _assert_trees_equal(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def _run_pair(data_mesh, server_cfg, num_rounds=4, participation=0.8,
+              dropout=0.2, ccfg=None, seed=3):
+    loss_fn, params, shards, codecs = _mixed_population()
+    ccfg = ccfg or ClientConfig(local_steps=2, lr=0.3)
+    out = {}
+    for backend in ("vmap", "mesh"):
+        fed = Federation(loss_fn, params, shards, list(codecs), ccfg,
+                         server_cfg, seed=seed, backend=backend,
+                         mesh=data_mesh if backend == "mesh" else None)
+        hist = fed.run(FedConfig(num_rounds=num_rounds,
+                                 participation=participation,
+                                 dropout=dropout, seed=9))
+        out[backend] = (fed, hist)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# padding / placement units
+# ---------------------------------------------------------------------------
+def test_padded_lanes_contract():
+    # divisibility AND ≥2 lanes per device (the batch-1 vmap hazard)
+    assert padded_lanes(6, 4) == 8
+    assert padded_lanes(8, 4) == 8
+    assert padded_lanes(2, 4) == 8      # 2 real lanes still give 2/device
+    assert padded_lanes(4, 4) == 8      # 1/device would lower differently
+    assert padded_lanes(5, 2) == 6
+    assert padded_lanes(2, 2) == 4
+    # a 1-device mesh IS the vmap layout: no padding at all
+    assert padded_lanes(3, 1) == 3
+    assert padded_lanes(1, 1) == 1
+    with pytest.raises(ValueError, match="positive"):
+        padded_lanes(3, 0)
+
+
+def test_stack_padded_repeats_first_lane():
+    trees = [{"x": jnp.full((3,), float(i))} for i in range(3)]
+    stacked = clients_lib.stack_padded(trees, 5)
+    got = np.asarray(stacked["x"])
+    np.testing.assert_array_equal(got[:3, 0], [0.0, 1.0, 2.0])
+    np.testing.assert_array_equal(got[3:, 0], [0.0, 0.0])  # lane-0 copies
+    with pytest.raises(ValueError, match="pad"):
+        clients_lib.stack_padded(trees, 2)
+
+
+def test_lane_pspec_covers_data_axes(data_mesh):
+    spec = lane_pspec(data_mesh)
+    assert spec == jax.sharding.PartitionSpec("data")
+
+
+# ---------------------------------------------------------------------------
+# collective folds vs the single-device reference
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("lanes", [2, 3, 6, 8])
+def test_mesh_weighted_mean_sequential_bitwise(data_mesh, lanes):
+    """The mesh fold (all_gather + the reference's sequential fold) is
+    bit-exact with server._stacked_mean_fn for every lane count, divisible
+    by the axis size or not."""
+    key = jax.random.key(1)
+    stacked = {"w": jax.random.normal(key, (lanes, 13, 5), jnp.float32),
+               "b": jax.random.normal(jax.random.fold_in(key, 1),
+                                      (lanes, 29), jnp.float32)}
+    w = np.random.default_rng(0).uniform(0.5, 2.0, lanes)
+    ref = server_lib._stacked_mean_fn("sequential")(
+        stacked, jnp.asarray(w, jnp.float32))
+    got = mesh_lib.mesh_weighted_mean(stacked, w, data_mesh, "sequential")
+    _assert_trees_equal(ref, got)
+
+
+def test_mesh_weighted_mean_pairwise_tolerance(data_mesh):
+    lanes = 6
+    key = jax.random.key(2)
+    stacked = {"w": jax.random.normal(key, (lanes, 31), jnp.float32)}
+    w = np.random.default_rng(1).uniform(0.5, 2.0, lanes)
+    ref = server_lib._stacked_mean_fn("sequential")(
+        stacked, jnp.asarray(w, jnp.float32))
+    got = mesh_lib.mesh_weighted_mean(stacked, w, data_mesh, "pairwise")
+    np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(ref["w"]),
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# the full driver: mesh backend ≡ vmap cohort engine, bit for bit
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("agg", ["fedavg", "fedopt", "fedmem"])
+def test_mesh_backend_bit_exact_with_vmap(data_mesh, agg):
+    """Params, fedopt opt_state, fedmem memory, EF memories, participation
+    counters and the byte ledger all match bitwise between the vmap cohort
+    engine and the mesh backend, on a mixed population with cohort sizes
+    that don't divide the device axis, under partial participation AND
+    straggler dropout."""
+    cfg = (ServerConfig(aggregator="fedopt", optimizer=sgd(1.0, momentum=0.5))
+           if agg == "fedopt" else ServerConfig(aggregator=agg))
+    out = _run_pair(data_mesh, cfg)
+    fv, hv = out["vmap"]
+    fm, hm = out["mesh"]
+    assert hv["participants"] == hm["participants"]
+    assert hv["stragglers"] == hm["stragglers"]
+    assert hv["wire_bytes"] == hm["wire_bytes"]          # to the byte
+    assert hv["analytic_bytes"] == hm["analytic_bytes"]
+    _assert_trees_equal(fv.server.params, fm.server.params)
+    _assert_trees_equal(fv.server.opt_state, fm.server.opt_state)
+    _assert_trees_equal(fv.server.memory, fm.server.memory)
+    for sv, sm in zip(fv.states, fm.states):
+        _assert_trees_equal(sv.ef, sm.ef)
+        assert int(sv.rounds_seen) == int(sm.rounds_seen)
+        np.testing.assert_array_equal(jax.random.key_data(sv.key),
+                                      jax.random.key_data(sm.key))
+
+
+def test_mesh_backend_pairwise_close_to_vmap(data_mesh):
+    out = _run_pair(data_mesh, ServerConfig(sum_mode="pairwise"),
+                    num_rounds=3, participation=1.0, dropout=0.0)
+    pv = np.asarray(out["vmap"][0].server.params["x"])
+    pm = np.asarray(out["mesh"][0].server.params["x"])
+    np.testing.assert_allclose(pm, pv, rtol=2e-5)
+
+
+def test_mesh_backend_compiles_one_program_per_cohort(data_mesh):
+    loss_fn, params, shards, codecs = _mixed_population()
+    fed = Federation(loss_fn, params, shards, codecs,
+                     ClientConfig(local_steps=1, lr=0.2), ServerConfig(),
+                     seed=0, backend="mesh", mesh=data_mesh)
+    fed.run(FedConfig(num_rounds=2))
+    assert len(fed._mesh_fns) == 2        # two multi-client cohorts
+    assert len(fed._cohort_fns) == 0      # vmap cohort path never used
+    assert len(fed._decode_fns) == 1      # identity singleton → scalar path
+
+
+def test_mesh_backend_requires_cohorts():
+    loss_fn, params, shards, codecs = _mixed_population()
+    with pytest.raises(ValueError, match="use_cohorts"):
+        Federation(loss_fn, params, shards, codecs, backend="mesh",
+                   use_cohorts=False)
+    with pytest.raises(ValueError, match="backend"):
+        Federation(loss_fn, params, shards, codecs, backend="pmap")
+
+
+# ---------------------------------------------------------------------------
+# straggler dropout: a dropped lane contributes ZERO wire bytes
+# ---------------------------------------------------------------------------
+def test_dropout_ledger_matches_analytic_audit_both_backends(data_mesh):
+    """With straggler dropout on, the per-round ledger must equal the
+    analytic audit summed over the SURVIVING participants only — on both
+    backends: dropped lanes (and mesh padding lanes) never transmit, so
+    they must never be charged."""
+    loss_fn, params, shards, codecs = _mixed_population()
+    analytic_of = {i: codecs[i].wire_bits(params) / 8.0
+                   for i in range(len(shards))}
+    for backend in ("vmap", "mesh"):
+        fed = Federation(loss_fn, params, shards, list(codecs),
+                         ClientConfig(local_steps=1, lr=0.2), ServerConfig(),
+                         seed=1, backend=backend,
+                         mesh=data_mesh if backend == "mesh" else None)
+        hist = fed.run(FedConfig(num_rounds=6, participation=0.9,
+                                 dropout=0.4, seed=11))
+        assert any(hist["stragglers"]), "dropout never fired — weak test"
+        assert hist["wire_bytes"] == hist["analytic_bytes"]
+        for t, participants in enumerate(hist["participants"]):
+            expect = sum(analytic_of[i] for i in participants)
+            assert hist["wire_bytes"][t] == expect, (
+                f"round {t} ({backend}): ledger {hist['wire_bytes'][t]} ≠ "
+                f"Σ analytic over survivors {expect} — a dropped or padded "
+                f"lane leaked into the ledger")
+            for s in hist["stragglers"][t]:
+                assert s not in participants
