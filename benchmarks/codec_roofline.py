@@ -1,0 +1,117 @@
+"""Measured roofline for the fused codec encoder (`kernels.quantencode`).
+
+Two jobs, per (N, bits, mode) sweep point:
+
+  1. GATE (always, every run): the fused Pallas kernel's (words, scale)
+     must be BIT-EXACT with the composed `kernels.ref.encode` oracle —
+     deterministically and on the dithered path with shared pre-drawn
+     dither. A fused kernel whose payload drifts from the reference would
+     silently change every wire byte in the repo, so the bench refuses to
+     report numbers for a config that fails the gate.
+  2. ROOFLINE: time the dispatched `kernels.ops.encode` path and report
+     achieved bytes/s against the analytic MINIMUM-traffic model — the
+     fused kernel's whole point is that HBM traffic collapses to
+
+         read  u        rows · N · 4 B     (+ dither rows · N · 4 B)
+         read  signs    N · 4 B            (+ mask   rows · 4 B)
+         write words    rows · N · bits/8 B
+         write scale    rows · 4 B
+
+     i.e. the f32 embedding never round-trips HBM. On TPU the ratio
+     achieved/minimum is the roofline figure of merit; on CPU (interpret
+     mode under REPRO_FORCE_PALLAS=1, or the jnp reference by default)
+     the timing is informational and the GATE is the payload.
+
+Run via `python -m benchmarks.run codec_roofline [--tiny]`; CI's
+bench-smoke lane runs the tiny sweep under REPRO_FORCE_PALLAS=1 so the
+gate exercises the actual kernel, not the reference against itself.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kernel_ops
+from repro.kernels import quantencode
+from repro.kernels import ref as kernel_ref
+
+
+def min_traffic_bytes(rows: int, n: int, bits: int, dithered: bool) -> int:
+    """The fused encoder's analytic minimum HBM traffic (bytes)."""
+    read = rows * n * 4 + n * 4              # u + signs
+    if dithered:
+        read += rows * n * 4                 # pre-drawn dither rows
+    write = rows * (n * bits // 8) + rows * 4  # packed words + scale
+    return read + write
+
+
+def _time_call(fn, *args, reps: int) -> float:
+    out = fn(*args)                          # warmup/compile
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _gate(chunks, signs, bits, dither) -> None:
+    """Assert the kernel payload is bit-exact with the composed oracle."""
+    kw, ks = quantencode.encode_pallas(chunks, signs, bits, dither=dither)
+    rw, rs = kernel_ref.encode(chunks, signs, bits, dither=dither)
+    if not np.array_equal(np.asarray(kw), np.asarray(rw)):
+        raise AssertionError(
+            f"payload words diverged from ref.encode at N={chunks.shape[-1]} "
+            f"bits={bits} dithered={dither is not None}")
+    if not np.array_equal(np.asarray(ks).view(np.int32),
+                          np.asarray(rs).view(np.int32)):
+        raise AssertionError(
+            f"payload scale diverged from ref.encode at N={chunks.shape[-1]} "
+            f"bits={bits} dithered={dither is not None}")
+
+
+def run(n_values=(256, 1024, 4096), bits_values=(1, 2, 4, 8), rows: int = 256,
+        reps: int = 3, seed: int = 0):
+    key = jax.random.key(seed)
+    records = []
+    for n in n_values:
+        k_x, k_s, k_d = jax.random.split(jax.random.fold_in(key, n), 3)
+        chunks = jax.random.normal(k_x, (rows, n), jnp.float32)
+        signs = jnp.where(
+            jax.random.bernoulli(k_s, 0.5, (n,)), 1.0, -1.0
+        ).astype(jnp.float32)
+        for bits in bits_values:
+            delta = 2.0 / (2 ** bits)
+            dither = jax.random.uniform(k_d, (rows, n), jnp.float32,
+                                        -delta / 2, delta / 2)
+            for mode, dth in (("det", None), ("dither", dither)):
+                _gate(chunks, signs, bits, dth)
+                sec = _time_call(
+                    lambda c, s, d, b=bits: kernel_ops.encode(
+                        c, s, b, dither=d),
+                    chunks, signs, dth, reps=reps)
+                mn = min_traffic_bytes(rows, n, bits, dth is not None)
+                records.append({
+                    "n": n, "bits": bits, "mode": mode, "usec": sec * 1e6,
+                    "min_traffic_bytes": mn,
+                    "gbps": mn / sec / 1e9,
+                })
+    print(f"{'N':>6} {'bits':>4} {'mode':>6} {'usec':>10} "
+          f"{'min B':>10} {'GB/s':>8}")
+    for r in records:
+        print(f"{r['n']:>6} {r['bits']:>4} {r['mode']:>6} "
+              f"{r['usec']:>10.1f} {r['min_traffic_bytes']:>10} "
+              f"{r['gbps']:>8.3f}")
+    gate = f"{len(records)} configs bitwise vs ref.encode"
+    print(f"[gate: {gate}; backend={jax.default_backend()}]")
+    return {"gate": gate, "backend": jax.default_backend(),
+            "best_gbps": max(r["gbps"] for r in records),
+            "records": records}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,81 @@
+"""Dry-run HLO report generator: aggregates dry-run JSON records into the
+EXPERIMENTS.md table (one row per arch × shape × mesh).
+
+Formerly `benchmarks.roofline` — renamed because it formats the HLO
+cost-model table of `repro.launch.dryrun`, not a measured kernel roofline
+(that's `benchmarks.codec_roofline` now). A shim module keeps the old
+import path working.
+
+The records are produced by `python -m repro.launch.dryrun --sweep
+--both-meshes --json-out results.json` (512-device process). This module only
+formats — it never imports the 512-device env.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def _fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(b) < 1024:
+            return f"{b:.2f}{unit}"
+        b /= 1024
+    return f"{b:.2f}PiB"
+
+
+def _fmt_s(s):
+    return f"{s*1e3:.2f}ms" if s is not None else "-"
+
+
+def table_rows(records):
+    rows = []
+    for r in records:
+        base = [r["arch"], r["shape"], r["mesh"]]
+        if r["status"] == "SKIP":
+            rows.append(base + ["SKIP: " + r["reason"][:48]] + ["-"] * 7)
+            continue
+        if r["status"] == "FAIL":
+            rows.append(base + ["FAIL: " + r["error"][:48]] + ["-"] * 7)
+            continue
+        roof = r["roofline"]
+        rows.append(base + [
+            "OK",
+            _fmt_bytes(r.get("bytes_per_device")),
+            _fmt_s(roof["compute_s"]), _fmt_s(roof["memory_s"]),
+            _fmt_s(roof["collective_s"]), roof["dominant"],
+            (f"{roof['useful_flops_ratio']:.2f}"
+             if roof.get("useful_flops_ratio") else "-"),
+            f"{roof['flops_per_device']:.2e}",
+        ])
+    return rows
+
+
+HEADER = ["arch", "shape", "mesh", "status", "bytes/dev", "compute",
+          "memory", "collective", "bound", "MF/HLO", "flops/dev"]
+
+
+def markdown(records) -> str:
+    rows = table_rows(records)
+    out = ["| " + " | ".join(HEADER) + " |",
+           "|" + "|".join("---" for _ in HEADER) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(x) for x in r) + " |")
+    return "\n".join(out)
+
+
+def main(path="dryrun_results.json"):
+    with open(path) as f:
+        records = json.load(f)
+    print(markdown(records))
+    ok = sum(1 for r in records if r["status"] == "OK")
+    skip = sum(1 for r in records if r["status"] == "SKIP")
+    fail = sum(1 for r in records if r["status"] == "FAIL")
+    print(f"\n{ok} OK / {skip} documented skips / {fail} FAIL "
+          f"of {len(records)} combos")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

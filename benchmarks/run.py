@@ -11,9 +11,10 @@ continues (nonzero exit at the end if anything failed). `--tiny` substitutes
 CPU-tiny kwargs for the CI smoke lane; `--json` writes per-benchmark
 wall-time + the headline result for the perf-trajectory artifact.
 
-The multi-pod dry-run / §Roofline table is produced separately by
+The multi-pod dry-run HLO table is produced separately by
 `python -m repro.launch.dryrun --sweep` (it needs a 512-device process) and
-formatted by benchmarks.roofline.
+formatted by benchmarks.hlo_report (formerly misnamed benchmarks.roofline;
+the measured kernel roofline is the `codec_roofline` benchmark below).
 """
 from __future__ import annotations
 
@@ -30,6 +31,7 @@ ALL = {
     "fed_agg": "fed_aggregate_scaling",
     "fed_cohort": "fed_cohort_scaling",
     "fed_mesh": "fed_mesh_scaling",
+    "codec_roofline": "codec_roofline",
     "table1": "table1_compressors",
     "fig1a": "fig1a_compression_error",
     "fig1b": "fig1b_dgddef_rate",
@@ -52,6 +54,8 @@ TINY = {
                        adaptive_m=8, adaptive_rounds=25),
     "fed_mesh": dict(m_values=(3, 8), dim=48, per_client=16, rounds=2,
                      chunk=32),
+    "codec_roofline": dict(n_values=(128, 512), bits_values=(1, 4),
+                           rows=16, reps=1),
     "table1": dict(n=256, trials=5),
     "fig1c": dict(dims=(128, 256, 512)),
 }

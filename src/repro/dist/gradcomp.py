@@ -6,9 +6,10 @@ Each parameter leaf is flattened, zero-padded to a multiple of `chunk`
 S = D·H from `core.frames` — the near-democratic embedding that flattens
 the per-chunk dynamic range so a single ‖x‖∞ scale + uniform R-bit
 quantization achieves the Thm. 1 error 2^(2−R)·√log(2·chunk) per chunk.
-The quantized codes are bit-packed into int32 words by the fused Pallas
-kernel (`kernels.quantpack` via `kernels.ops`), which is also the exact
-wire format audited by `wire_bytes_tree`.
+The whole encode chain runs as ONE fused Pallas kernel
+(`kernels.quantencode` via `kernels.ops.encode`) — sign flip, FWHT, scale,
+dither, quantize and int32 bit-pack in a single VMEM pass; its packed-word
+output is also the exact wire format audited by `wire_bytes_tree`.
 
 Shared randomness: the frame for leaf i is a pure function of
 (cfg.seed, i) — every worker builds the same frame, so gathered payloads
@@ -140,6 +141,46 @@ def _pad_rows(t: jax.Array, rows: int) -> jax.Array:
     return jnp.pad(t, ((0, rows - t.shape[0]),) + ((0, 0),) * (t.ndim - 1))
 
 
+def _exact_keep_mask(draw: jax.Array, k: int) -> jax.Array:
+    """Keep EXACTLY the k smallest of the (C, 1) uniform draws.
+
+    A `draw <= kth-smallest` threshold keeps MORE than k chunks when draws
+    tie, breaking the ledger == analytic-audit byte contract; double-argsort
+    ranking (stable, ties broken by chunk index — identical on every worker)
+    keeps exactly k always."""
+    rank = jnp.argsort(jnp.argsort(draw[:, 0]))
+    return (rank < k)[:, None]
+
+
+def _leaf_draws(leaf_idx: int, lc: int, rows: int, cfg: GradCompConfig,
+                round_idx, key: jax.Array | None) -> tuple:
+    """Pre-draw the per-round stochastic kernel inputs for one leaf.
+
+    Returns (dither (rows, chunk) | None, mask f32 (rows, 1) | None). The
+    draws happen at the LOGICAL chunk count `lc` from the same
+    `fold_in`-derived keys as always, then zero-extend over padding — they
+    are handed to the fused kernel as plain inputs, so forcing the Pallas
+    path can never change a payload."""
+    if key is None and (cfg.dithered or cfg.keep_fraction < 1.0):
+        key = _stoch_key(leaf_idx, round_idx, cfg)
+    dither = None
+    if cfg.dithered:
+        delta = 2.0 / (2 ** cfg.bits)
+        dither = _pad_rows(jax.random.uniform(
+            jax.random.fold_in(key, 1), (lc, cfg.chunk),
+            minval=-delta / 2, maxval=delta / 2), rows)
+    mask = None
+    if cfg.keep_fraction < 1.0:
+        draw = jax.random.uniform(jax.random.fold_in(key, 2), (lc, 1))
+        if cfg.exact_keep:
+            # fixed-size random subset: the k smallest draws stay on the wire
+            keep = _exact_keep_mask(draw, cfg.kept_chunks(lc))
+        else:
+            keep = draw < cfg.keep_fraction
+        mask = _pad_rows(keep.astype(jnp.float32), rows)
+    return dither, mask
+
+
 def encode_leaf(x: jax.Array, leaf_idx: int, cfg: GradCompConfig,
                 round_idx=0, key: jax.Array | None = None,
                 logical_chunks: int | None = None) -> dict:
@@ -154,37 +195,58 @@ def encode_leaf(x: jax.Array, leaf_idx: int, cfg: GradCompConfig,
     stochastic draws (dither, keep-mask) happen at the logical count and are
     zero-extended over the padding, so the payload of the padded layout is
     bit-exact with the un-padded all-gather encode on the real chunks.
-    """
+
+    The whole chain (sign-flip → FWHT → scale → dither → quantize+pack →
+    mask) runs in `kernel_ops.encode` — one fused VMEM pass on the Pallas
+    path, the composed jnp reference otherwise, bit-identical payloads
+    either way (dropped chunks emit all-zero words + zero scale, so the
+    wire carries no ghost information)."""
     chunks = _to_chunks(x, cfg.chunk)
     lc = chunks.shape[0] if logical_chunks is None else logical_chunks
     signs = _frame_signs(leaf_idx, cfg).astype(jnp.float32)
-    embedded = kernel_ops.fwht(chunks * signs)               # x = H·D·y
-    scale = jnp.max(jnp.abs(embedded), axis=-1, keepdims=True)
-    if key is None and (cfg.dithered or cfg.keep_fraction < 1.0):
-        key = _stoch_key(leaf_idx, round_idx, cfg)
-    if cfg.dithered:
-        delta = 2.0 / (2 ** cfg.bits)
-        dither = jax.random.uniform(
-            jax.random.fold_in(key, 1), (lc, cfg.chunk),
-            minval=-delta / 2, maxval=delta / 2)
-        embedded = embedded + _pad_rows(dither, chunks.shape[0]) * scale
-    words = kernel_ops.quantize_pack(embedded, scale, cfg.bits)
+    dither, mask = _leaf_draws(leaf_idx, lc, chunks.shape[0], cfg,
+                               round_idx, key)
+    words, scale = kernel_ops.encode(chunks, signs, cfg.bits,
+                                     dither=dither, mask=mask)
     payload = {"words": words, "scale": scale}
-    if cfg.keep_fraction < 1.0:
-        draw = jax.random.uniform(jax.random.fold_in(key, 2), (lc, 1))
-        if cfg.exact_keep:
-            # fixed-size random subset: the k smallest draws stay on the wire
-            k = cfg.kept_chunks(lc)
-            thresh = jnp.sort(draw[:, 0])[k - 1]
-            keep = draw <= thresh
-        else:
-            keep = draw < cfg.keep_fraction
-        mask = _pad_rows(keep.astype(jnp.float32), chunks.shape[0])
-        # zero dropped chunks so the payload carries no ghost information
-        payload["words"] = words * mask.astype(words.dtype)
-        payload["scale"] = scale * mask
+    if mask is not None:
         payload["mask"] = mask
     return payload
+
+
+def encode_leaf_ef(x: jax.Array, leaf_idx: int, cfg: GradCompConfig,
+                   round_idx=0, key: jax.Array | None = None,
+                   logical_chunks: int | None = None,
+                   residual_dtype=None) -> tuple:
+    """`encode_leaf` plus the error-feedback residual u − D(E(u)).
+
+    Returns (payload, residual) with residual of x's shape/dtype — what
+    the DGD-DEF update stores as the next round's EF state. On the Pallas
+    path the kernel decodes its own payload in-tile and emits the residual
+    without a second pass over the leaf; on the reference path the composed
+    decode replays `decode_leaf`'s op order exactly (including the
+    1/keep_fraction rescale only on the dithered-unbiased path and the
+    decode-dtype rounding before the subtract). `residual_dtype` is the
+    dtype the eager path would decode to (defaults to x's dtype); the fed
+    engine passes the PARAM dtype so u − D(E(u)) rounds where a real
+    decode would."""
+    chunks = _to_chunks(x, cfg.chunk)
+    lc = chunks.shape[0] if logical_chunks is None else logical_chunks
+    signs = _frame_signs(leaf_idx, cfg).astype(jnp.float32)
+    dither, mask = _leaf_draws(leaf_idx, lc, chunks.shape[0], cfg,
+                               round_idx, key)
+    rescale = (cfg.keep_fraction
+               if (mask is not None and cfg.dithered
+                   and not cfg.error_feedback) else None)
+    rdt = x.dtype if residual_dtype is None else residual_dtype
+    words, scale, resid = kernel_ops.encode_ef(
+        chunks, signs, cfg.bits, dither=dither, mask=mask,
+        rescale=rescale, residual_dtype=rdt)
+    payload = {"words": words, "scale": scale}
+    if mask is not None:
+        payload["mask"] = mask
+    residual = resid.reshape(-1)[:x.size].reshape(x.shape).astype(x.dtype)
+    return payload, residual
 
 
 def decode_leaf(payload: dict, leaf_idx: int, size: int, shape, dtype,

@@ -85,10 +85,22 @@ def _consensus(grads, ef, gc: G.GradCompConfig, axes, round_idx):
     outs, new_e = [], []
     for i, (g, e) in enumerate(zip(leaves, e_leaves)):
         u = g.astype(jnp.float32) + (e if e is not None else 0.0)
-        payload = G.encode_leaf(u, i, gc, round_idx)
-        d_own = G.decode_leaf(payload, i, u.size, u.shape, jnp.float32, gc)
+        resid = None
+        if gc.strategy == "allgather_packed" and gc.uses_ef:
+            # fused encode + EF: the kernel decodes its own payload in-tile
+            # and emits u − D(E(u)) alongside — no second decode pass
+            payload, resid = G.encode_leaf_ef(u, i, gc, round_idx)
+        else:
+            payload = G.encode_leaf(u, i, gc, round_idx)
         if gc.strategy == "psum_decoded":
+            # the consensus itself needs the decoded leaf here, so EF
+            # reuses it (u − (u − d) ≠ d in floats, so the fused residual
+            # can't substitute)
+            d_own = G.decode_leaf(payload, i, u.size, u.shape, jnp.float32,
+                                  gc)
             cons = jax.lax.pmean(d_own, axes)
+            if gc.uses_ef:
+                resid = u - d_own
         else:  # allgather_packed
             gathered = jax.tree.map(
                 lambda t: jax.lax.all_gather(t, axes, axis=0), payload)
@@ -97,7 +109,7 @@ def _consensus(grads, ef, gc: G.GradCompConfig, axes, round_idx):
             cons = jnp.mean(stacked, axis=0)
         outs.append(cons.astype(g.dtype))
         if gc.uses_ef:
-            new_e.append(u - d_own)
+            new_e.append(resid)
     grads = jax.tree.unflatten(treedef, outs)
     return grads, (jax.tree.unflatten(treedef, new_e) if gc.uses_ef else ef)
 

@@ -10,6 +10,11 @@ round counter. One federated round on client i:
     wire    ← E_i(u_i)          at budget R_i     (registry.TreeCodec)
     e_i     ← u_i − D_i(wire)                     (memory for next round)
 
+When the codec provides a fused `encode_ef` (the ndsc backend does, via the
+`repro.kernels.quantencode` Pallas kernel), the last two lines collapse into
+one call that emits (wire, e_i) together — the decoded f32 tree never
+materializes between separate encode and decode programs.
+
 `ClientState` is a flat pytree of arrays, so a cohort of clients sharing one
 (codec, config) pair stacks into a single state and runs under `jax.vmap`
 (`make_cohort_round`); heterogeneous-budget clients run one compiled
@@ -87,11 +92,17 @@ def _round_body(loss_fn: Callable, codec, cfg: ClientConfig, meta):
             local, global_params)
         u = (jax.tree.map(jnp.add, delta, state.ef)
              if cfg.error_feedback else delta)
-        wire = codec.encode(k_enc, u, round_idx)
-        if cfg.error_feedback:
+        if cfg.error_feedback and codec.encode_ef is not None:
+            # fused path: the codec emits u − D(E(u)) alongside the wire
+            # (same payload as `encode` under the same key; on the Pallas
+            # backend the residual never round-trips HBM as decoded f32)
+            wire, ef = codec.encode_ef(k_enc, u, meta, round_idx)
+        elif cfg.error_feedback:
+            wire = codec.encode(k_enc, u, round_idx)
             decoded = codec.decode(wire, meta)
             ef = jax.tree.map(jnp.subtract, u, decoded)
         else:
+            wire = codec.encode(k_enc, u, round_idx)
             ef = state.ef
         return wire, ClientState(ef=ef, key=k_next,
                                  rounds_seen=state.rounds_seen + 1)

@@ -18,8 +18,10 @@ Lane placement contract:
     downstream — `server._check_weights` explicitly admits exact zeros.
   * per-lane numerics are IDENTICAL to the vmap cohort engine: shard_map
     merely splits the lane axis across devices, and the round body is the
-    same `clients._round_body` vmapped per shard, so wires, EF states,
-    decoded deltas and norms agree bit for bit (regression-tested).
+    same `clients._round_body` vmapped per shard — including the fused
+    `codec.encode_ef` path (one `kernels.quantencode` pass per leaf emits
+    wire + EF residual together) — so wires, EF states, decoded deltas and
+    norms agree bit for bit (regression-tested).
 
 Server reduce contract (`ServerConfig.sum_mode`, same words as PR 4):
 

@@ -67,6 +67,13 @@ class TreeCodec:
     spec: Optional[tuple] = None   # hashable identity: equal specs ⇒ the
                                    # codecs are interchangeable (same factory,
                                    # budget and kwargs) — the cohort-key unit
+    encode_ef: Optional[Callable] = None
+    # (key, tree, meta, round_idx=0) -> (wire, residual tree). Fused
+    # encode + error-feedback residual u − D(E(u)): same wire as `encode`
+    # under the same key, residual emitted without a separate decode pass
+    # (on TPU, without the decoded f32 tree round-tripping HBM). Backends
+    # without a fused path leave this None and the fed engine composes
+    # decode(encode(u)) itself.
 
     def compress(self, key, tree, round_idx=0):
         """One-shot (payload, analytic bits) — the ISSUE's convenience form."""
@@ -205,6 +212,18 @@ def _ndsc(budget, *, chunk: int = 128, dithered: bool = False,
             for i, (x, c) in enumerate(zip(leaves, cfgs))]
         return jax.tree.unflatten(treedef, payloads)
 
+    def encode_ef(key, tree, meta, round_idx=0):
+        leaves = meta.treedef.flatten_up_to(tree)
+        pairs = [
+            G.encode_leaf_ef(x, i, c, round_idx,
+                             key=jax.random.fold_in(key, i),
+                             residual_dtype=info[2])
+            for i, (x, c, info) in
+            enumerate(zip(leaves, meta.extra, meta.infos))]
+        wire = jax.tree.unflatten(meta.treedef, [p for p, _ in pairs])
+        resid = jax.tree.unflatten(meta.treedef, [r for _, r in pairs])
+        return wire, resid
+
     def meta(tree):
         treedef, infos = _tree_meta(tree)
         return TreeMeta(treedef, infos, extra=cfgs_for(len(infos)))
@@ -232,7 +251,8 @@ def _ndsc(budget, *, chunk: int = 128, dithered: bool = False,
            else f"ndsc(R per leaf={[round(float(b), 3) for b in budget]})")
     return TreeCodec(tag, encode, decode, meta, wire_bits, wire_bytes,
                      rate=(gradcomp_config_for_budget(
-                         budget, chunk).effective_bits if scalar else None))
+                         budget, chunk).effective_bits if scalar else None),
+                     encode_ef=encode_ef)
 
 
 # ---------------------------------------------------------------------------

@@ -41,11 +41,14 @@ def _fwht_kernel(x_ref, o_ref, *, n: int):
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def fwht_pallas(x: jax.Array, block_rows: int = DEFAULT_BLOCK_ROWS,
-                interpret: bool = True) -> jax.Array:
+                interpret: bool | None = None) -> jax.Array:
     """Normalized FWHT along the last axis via pl.pallas_call.
 
-    x: (..., N) with N a power of 2, N ≤ MAX_VMEM_N.
+    x: (..., N) with N a power of 2, N ≤ MAX_VMEM_N. interpret=None infers
+    from the backend: compiled on TPU, interpreter elsewhere.
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     n = x.shape[-1]
     if n & (n - 1):
         raise ValueError(f"FWHT length {n} is not a power of 2")

@@ -6,14 +6,19 @@ Dispatch policy:
     faster than interpret-mode Pallas. Tests exercise the Pallas path explicitly
     with interpret=True to validate the kernels against the reference oracles.
 Set REPRO_FORCE_PALLAS=1 to force the (interpret-mode on CPU) Pallas path.
+On the forced path a kernel that CANNOT run (e.g. N over the single-tile
+VMEM budget) raises instead of silently substituting the reference — a
+silent fallback would make "forced Pallas" tests vacuous.
 """
 from __future__ import annotations
 
 import os
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import fwht as _fwht_kernel
+from repro.kernels import quantencode as _quantencode_kernel
 from repro.kernels import quantpack as _quantpack_kernel
 from repro.kernels import ref as _ref
 
@@ -24,25 +29,80 @@ def _use_pallas() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _forced() -> bool:
+    return os.environ.get("REPRO_FORCE_PALLAS") == "1"
+
+
 def fwht(x: jax.Array) -> jax.Array:
     """Normalized Walsh–Hadamard transform along the last axis (power-of-2 len)."""
-    if _use_pallas() and x.shape[-1] <= _fwht_kernel.MAX_VMEM_N:
-        return _fwht_kernel.fwht_pallas(
-            x, interpret=jax.default_backend() != "tpu")
+    if _use_pallas():
+        if x.shape[-1] <= _fwht_kernel.MAX_VMEM_N:
+            return _fwht_kernel.fwht_pallas(x)
+        if _forced():
+            raise ValueError(
+                f"REPRO_FORCE_PALLAS=1 but FWHT N={x.shape[-1]} exceeds the "
+                f"single-tile VMEM budget {_fwht_kernel.MAX_VMEM_N}; the "
+                "forced path refuses to silently fall back to the jnp "
+                "reference")
     return _ref.fwht(x)
 
 
 def quantize_pack(x: jax.Array, scale: jax.Array, bits: int) -> jax.Array:
     """Fused uniform-quantize + bit-pack to int32 words (bits ∈ {1,2,4,8})."""
     if _use_pallas():
-        return _quantpack_kernel.quantize_pack_pallas(
-            x, scale, bits, interpret=jax.default_backend() != "tpu")
+        return _quantpack_kernel.quantize_pack_pallas(x, scale, bits)
     return _ref.quantize_pack(x, scale, bits)
 
 
 def unpack_dequant(words: jax.Array, scale: jax.Array, bits: int, n: int) -> jax.Array:
     """Fused unpack + dequantize (inverse of quantize_pack)."""
     if _use_pallas():
-        return _quantpack_kernel.unpack_dequant_pallas(
-            words, scale, bits, n, interpret=jax.default_backend() != "tpu")
+        return _quantpack_kernel.unpack_dequant_pallas(words, scale, bits, n)
     return _ref.unpack_dequant(words, scale, bits, n)
+
+
+def encode(chunks: jax.Array, signs: jax.Array, bits: int, *,
+           dither: jax.Array | None = None,
+           mask: jax.Array | None = None) -> tuple:
+    """Fused codec encode: sign-flip → FWHT → ℓ∞ scale → (dither) →
+    quantize+pack → (mask), one VMEM pass on the Pallas path.
+
+    The Pallas kernel's (words, scale) are bit-exact with the composed
+    `ref.encode`, so dispatch never changes a wire payload. Falls back to
+    the reference when N exceeds the single-tile budget (raising instead
+    under REPRO_FORCE_PALLAS=1, like `fwht`)."""
+    if _use_pallas():
+        if chunks.shape[-1] <= _quantencode_kernel.MAX_VMEM_N:
+            return _quantencode_kernel.encode_pallas(
+                chunks, signs, bits, dither=dither, mask=mask)
+        if _forced():
+            raise ValueError(
+                f"REPRO_FORCE_PALLAS=1 but encode N={chunks.shape[-1]} "
+                f"exceeds the single-tile VMEM budget "
+                f"{_quantencode_kernel.MAX_VMEM_N}")
+    return _ref.encode(chunks, signs, bits, dither=dither, mask=mask)
+
+
+def encode_ef(chunks: jax.Array, signs: jax.Array, bits: int, *,
+              dither: jax.Array | None = None,
+              mask: jax.Array | None = None,
+              rescale: float | None = None,
+              residual_dtype=None) -> tuple:
+    """`encode` plus the in-tile error-feedback residual u − D(E(u)).
+
+    Same payload contract as `encode`; the residual (local EF state, never
+    on the wire) matches `ref.encode_ef` to a few f32 ulp on the Pallas
+    path. residual_dtype=None means f32 (no leaf-dtype rounding)."""
+    rdt = jnp.float32 if residual_dtype is None else residual_dtype
+    if _use_pallas():
+        if chunks.shape[-1] <= _quantencode_kernel.MAX_VMEM_N:
+            return _quantencode_kernel.encode_ef_pallas(
+                chunks, signs, bits, dither=dither, mask=mask,
+                rescale=rescale, residual_dtype=rdt)
+        if _forced():
+            raise ValueError(
+                f"REPRO_FORCE_PALLAS=1 but encode N={chunks.shape[-1]} "
+                f"exceeds the single-tile VMEM budget "
+                f"{_quantencode_kernel.MAX_VMEM_N}")
+    return _ref.encode_ef(chunks, signs, bits, dither=dither, mask=mask,
+                          rescale=rescale, residual_dtype=rdt)

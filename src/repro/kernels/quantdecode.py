@@ -102,10 +102,13 @@ def quant_decode_attention_pallas(q: jax.Array, kw: jax.Array, ks: jax.Array,
                                   kv_len: jax.Array, *, bits: int,
                                   block_c: int = DEFAULT_BLOCK_C,
                                   inv_rotate_v: bool = True,
-                                  interpret: bool = True) -> jax.Array:
+                                  interpret: bool | None = None) -> jax.Array:
     """q: (B,K,G,dh) f32 (already ·dh^-1/4-scaled & rotated);
     kw/vw: (B,C,K,dh·bits/32) i32; ks/vs: (B,C,K) f32; kv_len: (B,) i32.
-    Returns (B, K, G, dh) f32 attention output (V un-rotated)."""
+    Returns (B, K, G, dh) f32 attention output (V un-rotated).
+    interpret=None infers from the backend (compiled on TPU)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     b, kh, g, dh = q.shape
     c = kw.shape[1]
     if c % block_c:

@@ -1,0 +1,237 @@
+"""Pallas TPU kernel: the FUSED codec encoder (the NDSC encode hot loop).
+
+Every subsystem's encode path — gradcomp consensus, ZeRO-1, fed cohorts and
+the mesh backend — runs sign-flip (D) → FWHT → ℓ∞ scale → (dither) →
+uniform quantize → int32 bit-pack on each (C, chunk) block. Composed at the
+XLA level those are separate programs with full-precision HBM round-trips
+between every stage: the f32 embedding is written out after the FWHT, read
+back for the scale reduction, written again after the dither… This kernel
+does the whole chain inside one (block_rows, N) VMEM tile, so the f32
+embedding NEVER touches HBM — HBM traffic drops to "read y once, write
+N·bits/32 words + one f32 scale per row", the codec's information-theoretic
+minimum (gated in `benchmarks/codec_roofline.py`).
+
+A fused error-feedback variant (`encode_ef_pallas`) additionally
+unpacks/dequantizes its own words in-tile, inverse-rotates, and emits the
+EF residual u − D(E(u)) alongside — the DGD-DEF update without a second
+pass over the leaf.
+
+Semantics are defined by the composed jnp oracles `ref.encode` /
+`ref.encode_ef`. The PAYLOAD contract is strict: (words, scale) are
+BIT-EXACT with `ref.encode` (asserted in tests and by the roofline gate) —
+deterministically, and on the dithered / sub-linear paths given the same
+pre-drawn dither / keep-mask inputs. The stochastic draws happen OUTSIDE
+the kernel (in `gradcomp.encode_leaf`, from the same `fold_in`-derived keys
+as before), so forcing the Pallas path can never change a payload. The EF
+residual is LOCAL state (never on the wire): it matches `ref.encode_ef` to
+within a few f32 ulp of the embedding scale — the compiler may contract
+the in-tile decode's multiply→add chains into fmas, which tests bound with
+a tight tolerance rather than bitwise equality.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.fwht import MAX_VMEM_N
+
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _fwht_tile(x: jax.Array, n: int) -> jax.Array:
+    """Radix-2 butterfly sweeps on a resident (rows, n) tile — the same op
+    sequence as ref.fwht, so compiled/interpret results match it bitwise."""
+    rows = x.shape[0]
+    h = 1
+    while h < n:
+        x = x.reshape(rows, n // (2 * h), 2, h)
+        a = x[:, :, 0, :]
+        b = x[:, :, 1, :]
+        x = jnp.stack([a + b, a - b], axis=2)
+        x = x.reshape(rows, n)
+        h *= 2
+    return x * (1.0 / math.sqrt(n))
+
+
+def _quantize_tile(x: jax.Array, scale: jax.Array, bits: int, n: int):
+    """(rows, n) f32 → (rows, n·bits/32) uint32 — same ops as ref.quantize_pack."""
+    k = 32 // bits
+    m = 2 ** bits
+    delta = 2.0 / m
+    normalized = x / jnp.maximum(scale, jnp.finfo(x.dtype).tiny)
+    idx = jnp.floor((jnp.clip(normalized, -1.0, 1.0) + 1.0) / delta)
+    idx = jnp.clip(idx, 0, m - 1).astype(jnp.uint32)
+    grouped = idx.reshape(idx.shape[0], n // k, k)
+    shifts = (jnp.arange(k, dtype=jnp.uint32) * bits)[None, None, :]
+    return jnp.sum(grouped << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def _dequantize_tile(words: jax.Array, scale: jax.Array, bits: int, n: int):
+    """Inverse of _quantize_tile — same ops as ref.unpack_dequant."""
+    k = 32 // bits
+    m = 2 ** bits
+    mask = jnp.uint32(m - 1)
+    shifts = (jnp.arange(k, dtype=jnp.uint32) * bits)[None, None, :]
+    idx = (words.astype(jnp.uint32)[:, :, None] >> shifts) & mask
+    idx = idx.reshape(words.shape[0], n)
+    values = -1.0 + (2.0 * idx.astype(jnp.float32) + 1.0) / m
+    return values * scale
+
+
+def _encode_kernel(*refs, bits: int, n: int, dithered: bool, masked: bool,
+                   ef: bool, rescale, residual_dtype):
+    """One grid step: encode a (block_rows, n) tile fully in VMEM.
+
+    Operand order (inputs): x, signs, [dither], [mask];
+    (outputs): words, scale, [decoded]."""
+    it = iter(refs)
+    x_ref = next(it)
+    signs_ref = next(it)
+    dither_ref = next(it) if dithered else None
+    mask_ref = next(it) if masked else None
+    words_ref = next(it)
+    scale_ref = next(it)
+    residual_ref = next(it) if ef else None
+
+    u = x_ref[...]                                    # (rows, n) f32 input
+    signs = signs_ref[...]                            # (1, n) ±1 f32
+    embedded = _fwht_tile(u * signs, n)               # x = H·D·u
+    scale = jnp.max(jnp.abs(embedded), axis=-1, keepdims=True)
+    if dithered:
+        embedded = embedded + dither_ref[...] * scale
+    words = _quantize_tile(embedded, scale, bits, n)
+    out_scale = scale
+    out_words = words.astype(jnp.int32)
+    if masked:
+        mask = mask_ref[...]                          # (rows, 1) 0/1 f32
+        out_words = out_words * mask.astype(jnp.int32)
+        out_scale = scale * mask
+    words_ref[...] = out_words
+    scale_ref[...] = out_scale
+
+    if ef:
+        # decode the tile's OWN (masked) payload in-tile, replaying
+        # decode_leaf's op order exactly: dequant → mask → (1/keep rescale)
+        # → FWHT → sign-flip → leaf-dtype rounding → subtract. The residual
+        # never leaves VMEM un-reduced: u is already resident, so the EF
+        # state costs no second pass over the leaf.
+        x_hat = _dequantize_tile(out_words, out_scale, bits, n)
+        if masked:
+            x_hat = x_hat * mask_ref[...]
+            if rescale is not None:
+                x_hat = x_hat / rescale
+        y_hat = _fwht_tile(x_hat, n) * signs
+        y_hat = y_hat.astype(residual_dtype).astype(jnp.float32)
+        residual_ref[...] = u - y_hat
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "block_rows", "interpret", "ef",
+                              "rescale", "residual_dtype"))
+def _encode_call(x, signs, dither, mask, *, bits: int, block_rows: int,
+                 interpret, ef: bool, rescale, residual_dtype):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = x.shape[-1]
+    if n & (n - 1):
+        raise ValueError(f"encode length {n} is not a power of 2")
+    if n > MAX_VMEM_N:
+        raise ValueError(f"N={n} exceeds single-tile VMEM budget {MAX_VMEM_N}")
+    if bits not in (1, 2, 4, 8):
+        raise ValueError(f"bits must be in {{1,2,4,8}}, got {bits}")
+    k = 32 // bits
+    if n % k:
+        raise ValueError(f"N={n} not divisible by packing factor {k}")
+    lead = x.shape[:-1]
+    flat = x.astype(jnp.float32).reshape((-1, n))
+    rows = flat.shape[0]
+    padded = -(-rows // block_rows) * block_rows
+    signs2d = signs.astype(jnp.float32).reshape((1, n))
+
+    def pad(t):
+        return (t if t.shape[0] == padded
+                else jnp.pad(t, ((0, padded - t.shape[0]), (0, 0))))
+
+    row_spec = pl.BlockSpec((block_rows, n), lambda i: (i, 0))
+    inputs = [pad(flat)]
+    if dither is not None:
+        inputs.append(pad(dither.astype(jnp.float32).reshape((-1, n))))
+    if mask is not None:
+        inputs.append(pad(mask.astype(jnp.float32).reshape((-1, 1))))
+    # signs go FIRST after x in the kernel's operand order
+    inputs.insert(1, signs2d)
+    in_specs = [row_spec, pl.BlockSpec((1, n), lambda i: (0, 0))]
+    if dither is not None:
+        in_specs.append(row_spec)
+    if mask is not None:
+        in_specs.append(pl.BlockSpec((block_rows, 1), lambda i: (i, 0)))
+
+    out_shape = [jax.ShapeDtypeStruct((padded, n // k), jnp.int32),
+                 jax.ShapeDtypeStruct((padded, 1), jnp.float32)]
+    out_specs = [pl.BlockSpec((block_rows, n // k), lambda i: (i, 0)),
+                 pl.BlockSpec((block_rows, 1), lambda i: (i, 0))]
+    if ef:
+        out_shape.append(jax.ShapeDtypeStruct((padded, n), jnp.float32))
+        out_specs.append(row_spec)
+
+    kernel = functools.partial(
+        _encode_kernel, bits=bits, n=n, dithered=dither is not None,
+        masked=mask is not None, ef=ef, rescale=rescale,
+        residual_dtype=residual_dtype)
+    outs = pl.pallas_call(
+        kernel,
+        grid=(padded // block_rows,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*inputs)
+    words = outs[0][:rows].reshape(lead + (n // k,))
+    scale = outs[1][:rows].reshape(lead + (1,))
+    if ef:
+        return words, scale, outs[2][:rows].reshape(lead + (n,))
+    return words, scale
+
+
+def encode_pallas(chunks: jax.Array, signs: jax.Array, bits: int, *,
+                  dither: jax.Array | None = None,
+                  mask: jax.Array | None = None,
+                  block_rows: int = DEFAULT_BLOCK_ROWS,
+                  interpret: bool | None = None) -> tuple:
+    """Fused codec encode — semantics of `ref.encode` in one VMEM pass.
+
+    chunks: (..., N) float rows (N a power of 2, ≤ MAX_VMEM_N, divisible by
+    the 32/bits packing factor); signs: (N,) ±1; dither/mask as in
+    `ref.encode` (pre-drawn OUTSIDE the kernel). `interpret=None` infers
+    from the backend (compiled on TPU, interpreter elsewhere).
+    Returns (words int32 (..., N·bits/32), scale f32 (..., 1)).
+    """
+    return _encode_call(chunks, signs, dither, mask, bits=bits,
+                        block_rows=block_rows, interpret=interpret,
+                        ef=False, rescale=None, residual_dtype=jnp.float32)
+
+
+def encode_ef_pallas(chunks: jax.Array, signs: jax.Array, bits: int, *,
+                     dither: jax.Array | None = None,
+                     mask: jax.Array | None = None,
+                     rescale: float | None = None,
+                     residual_dtype=jnp.float32,
+                     block_rows: int = DEFAULT_BLOCK_ROWS,
+                     interpret: bool | None = None) -> tuple:
+    """Fused encode + error-feedback residual — semantics of `ref.encode_ef`.
+
+    Returns (words, scale, residual f32 (..., N)) where residual is
+    u − D(E(u)) with the decode replayed and subtracted in-tile
+    (`rescale` = keep_fraction for the dithered-unbiased path, None for
+    the contractive EF path; `residual_dtype` = the leaf dtype the eager
+    tree-level decode rounds through before the f32 subtract). (words,
+    scale) keep the bitwise payload contract; the residual matches
+    `ref.encode_ef` to a few f32 ulp of the embedding scale."""
+    return _encode_call(chunks, signs, dither, mask, bits=bits,
+                        block_rows=block_rows, interpret=interpret,
+                        ef=True, rescale=rescale,
+                        residual_dtype=jnp.dtype(residual_dtype))

@@ -58,8 +58,12 @@ def _tile(call, flat_inputs, out_shape, block_rows):
 @functools.partial(jax.jit, static_argnames=("bits", "block_rows", "interpret"))
 def quantize_pack_pallas(x: jax.Array, scale: jax.Array, bits: int,
                          block_rows: int = DEFAULT_BLOCK_ROWS,
-                         interpret: bool = True) -> jax.Array:
-    """x: (..., N) float, scale: (..., 1) → packed int32 (..., N*bits/32)."""
+                         interpret: bool | None = None) -> jax.Array:
+    """x: (..., N) float, scale: (..., 1) → packed int32 (..., N*bits/32).
+
+    interpret=None infers from the backend (compiled on TPU)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     if bits not in (1, 2, 4, 8):
         raise ValueError(f"bits must be in {{1,2,4,8}}, got {bits}")
     k = 32 // bits
@@ -89,8 +93,12 @@ def quantize_pack_pallas(x: jax.Array, scale: jax.Array, bits: int,
 @functools.partial(jax.jit, static_argnames=("bits", "n", "block_rows", "interpret"))
 def unpack_dequant_pallas(words: jax.Array, scale: jax.Array, bits: int, n: int,
                           block_rows: int = DEFAULT_BLOCK_ROWS,
-                          interpret: bool = True) -> jax.Array:
-    """words: (..., N*bits/32) int32, scale: (..., 1) → float (..., n)."""
+                          interpret: bool | None = None) -> jax.Array:
+    """words: (..., N*bits/32) int32, scale: (..., 1) → float (..., n).
+
+    interpret=None infers from the backend (compiled on TPU)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     if bits not in (1, 2, 4, 8):
         raise ValueError(f"bits must be in {{1,2,4,8}}, got {bits}")
     k = 32 // bits

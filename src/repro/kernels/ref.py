@@ -1,7 +1,8 @@
 """Pure-jnp reference oracles for the Pallas kernels.
 
-These define the semantics; the Pallas kernels in fwht.py / quantpack.py must
-match them (tests sweep shapes/dtypes and assert_allclose against these).
+These define the semantics; the Pallas kernels in fwht.py / quantpack.py /
+quantencode.py must match them — bitwise for integer wire payloads, to
+tolerance for float outputs (tests sweep shapes/dtypes against these).
 """
 from __future__ import annotations
 
@@ -60,6 +61,71 @@ def quantize_pack(x: jax.Array, scale: jax.Array, bits: int) -> jax.Array:
     shifts = (jnp.arange(k, dtype=jnp.uint32) * bits)[(None,) * (grouped.ndim - 1)]
     words = jnp.sum(grouped << shifts, axis=-1, dtype=jnp.uint32)
     return words.astype(jnp.int32)
+
+
+def encode(chunks: jax.Array, signs: jax.Array, bits: int, *,
+           dither: jax.Array | None = None,
+           mask: jax.Array | None = None) -> tuple:
+    """Composed-reference codec encode: sign-flip → FWHT → ℓ∞ scale →
+    (dither) → quantize+pack → (mask). The fused Pallas kernel in
+    quantencode.py must match this BIT-EXACTLY.
+
+    chunks: (..., N) float — the pre-embedding rows (one codec chunk each).
+    signs:  (N,) ±1 float  — the diagonal D of the Hadamard frame S = D·H.
+    dither: optional (..., N), pre-drawn uniform in [-Δ/2, Δ/2]; added as
+            `dither · scale` AFTER the scale reduction (non-subtractive).
+    mask:   optional (..., 1) 0/1 float — kept rows; dropped rows emit
+            all-zero words and a zero scale (no ghost information).
+
+    Returns (words int32 (..., N·bits/32), scale f32 (..., 1)).
+    """
+    embedded = fwht(chunks * signs)
+    scale = jnp.max(jnp.abs(embedded), axis=-1, keepdims=True)
+    if dither is not None:
+        embedded = embedded + dither * scale
+    words = quantize_pack(embedded, scale, bits)
+    if mask is not None:
+        words = words * mask.astype(words.dtype)
+        scale = scale * mask
+    return words, scale
+
+
+def decode_embedded(words: jax.Array, scale: jax.Array, signs: jax.Array,
+                    bits: int, n: int, *, mask: jax.Array | None = None,
+                    rescale: float | None = None) -> jax.Array:
+    """Composed-reference codec decode back to the ORIGINAL domain:
+    unpack+dequant → (mask, 1/keep rescale) → FWHT → sign-flip. Mirrors
+    `repro.dist.gradcomp.decode_leaf` on a single chunk block."""
+    x_hat = unpack_dequant(words, scale, bits, n)
+    if mask is not None:
+        x_hat = x_hat * mask
+        if rescale is not None:
+            x_hat = x_hat / rescale
+    return fwht(x_hat) * signs.astype(x_hat.dtype)
+
+
+def encode_ef(chunks: jax.Array, signs: jax.Array, bits: int, *,
+              dither: jax.Array | None = None,
+              mask: jax.Array | None = None,
+              rescale: float | None = None,
+              residual_dtype=jnp.float32) -> tuple:
+    """`encode` plus the error-feedback residual u − D(E(u)).
+
+    The residual is what the EF update keeps: the encoder's own payload is
+    decoded (through `residual_dtype`, the leaf dtype the eager tree-level
+    decode would round through) and subtracted from the input rows.
+    Returns (words, scale, residual f32 (..., N))."""
+    words, scale = encode(chunks, signs, bits, dither=dither, mask=mask)
+    y_hat = decode_embedded(words, scale, signs, bits, chunks.shape[-1],
+                            mask=mask, rescale=rescale)
+    y_hat = y_hat.astype(residual_dtype).astype(jnp.float32)
+    # No fusion fence here: under an enclosing jit XLA may contract the
+    # decode's multiply→add chains into the subtract (exactly as it could
+    # in the pre-fused decode-then-subtract composition), so the residual
+    # is bit-stable only eagerly — the EF contract is tolerance-based.
+    # (jax.lax.optimization_barrier would pin it, but 0.4.x has no vmap
+    # batching rule for it and the fed cohort engine vmaps this path.)
+    return words, scale, chunks.astype(jnp.float32) - y_hat
 
 
 def quant_decode_attention(q: jax.Array, kw: jax.Array, ks: jax.Array,

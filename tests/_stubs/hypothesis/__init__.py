@@ -4,7 +4,8 @@ Only used when the real hypothesis is not installed — tests/conftest.py adds
 this directory to sys.path as a fallback, so `pip install .[test]` (CI, dev
 machines) always wins. Implements exactly what this repo's property tests
 use: @given with positional/keyword strategies, @settings(max_examples,
-deadline), st.integers / st.sampled_from / st.floats / st.booleans.
+deadline), st.integers / st.sampled_from / st.floats / st.booleans /
+st.lists.
 
 Draws are deterministic per test (seeded by the test's qualified name), so a
 failing example reproduces on re-run. No shrinking — the drawn kwargs appear
@@ -51,6 +52,13 @@ class strategies:  # noqa: N801 — mirrors `hypothesis.strategies` module use
     @staticmethod
     def booleans():
         return SearchStrategy(lambda r: r.random() < 0.5, "booleans()")
+
+    @staticmethod
+    def lists(elements, min_size: int = 0, max_size: int = 10):
+        return SearchStrategy(
+            lambda r: [elements.example_from(r)
+                       for _ in range(r.randint(min_size, max_size))],
+            f"lists({elements.label}, {min_size}..{max_size})")
 
 
 st = strategies

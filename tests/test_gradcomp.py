@@ -209,3 +209,84 @@ def test_wire_audit_sublinear_matches_analytic(bits, keep, n):
     assert audit["payload_bytes"] == pytest.approx(expect)
     assert audit["compression_x"] == pytest.approx(n * 4 / expect)
     assert audit["allgather_rx_bytes"] == pytest.approx(3 * expect)
+
+
+# ---------------------------------------------------------------------------
+# exact_keep tie handling (the `draw <= thresh` bug kept >k chunks on ties)
+# ---------------------------------------------------------------------------
+@given(k=st.integers(0, 12),
+       draws=st.lists(st.sampled_from([0.1, 0.3, 0.3, 0.3, 0.7]),
+                      min_size=1, max_size=12))
+@settings(max_examples=40, deadline=None)
+def test_exact_keep_mask_exact_count_under_ties(k, draws):
+    """_exact_keep_mask keeps EXACTLY min(k, c) chunks no matter how many
+    draws tie — the k-th order statistic threshold would keep every tied
+    chunk and blow the fixed wire budget."""
+    k = min(k, len(draws))
+    draw = jnp.asarray(draws, jnp.float32)[:, None]
+    keep = G._exact_keep_mask(draw, k)
+    assert keep.shape == draw.shape
+    assert int(keep.sum()) == k
+
+
+def test_exact_keep_all_ties_end_to_end(monkeypatch):
+    """Worst case — EVERY keep-draw identical: the payload must still carry
+    exactly kept_chunks(c) chunks and the realized bytes must equal the
+    analytic audit (ties broken by chunk index, same on every worker)."""
+    real_uniform = jax.random.uniform
+
+    def tied_uniform(key, shape=(), *args, **kwargs):
+        if tuple(shape)[-1:] == (1,):       # the (c, 1) keep draw
+            return jnp.full(shape, 0.5, jnp.float32)
+        return real_uniform(key, shape, *args, **kwargs)
+
+    monkeypatch.setattr(jax.random, "uniform", tied_uniform)
+    cfg = G.GradCompConfig(bits=2, chunk=64, keep_fraction=0.4,
+                           exact_keep=True)
+    x = jax.random.normal(jax.random.key(0), (700,))
+    c = -(-700 // 64)
+    tree = {"x": x}
+    payloads, _ = G.compress_tree(tree, cfg)
+    mask = np.asarray(payloads["x"]["mask"])[:, 0]
+    k = cfg.kept_chunks(c)
+    assert int(mask.sum()) == k
+    # stable argsort rank ⇒ ties resolve to the lowest chunk indices
+    np.testing.assert_array_equal(mask, ([1.0] * k + [0.0] * (c - k)))
+    assert (G.wire_bytes_payload(payloads, cfg)
+            == G.wire_bytes_tree(tree, cfg)["payload_bytes"])
+
+
+def test_exact_keep_matches_threshold_when_no_ties():
+    """With all-distinct draws the argsort-rank fix selects the same chunks
+    the old k-th-order-statistic threshold did (regression guard)."""
+    draw = jax.random.uniform(jax.random.key(3), (50, 1))
+    k = 20
+    keep = G._exact_keep_mask(draw, k)
+    thresh = jnp.sort(draw[:, 0])[k - 1]
+    np.testing.assert_array_equal(np.asarray(keep),
+                                  np.asarray(draw <= thresh))
+
+
+# ---------------------------------------------------------------------------
+# fused encode+EF entry point
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kwargs", [
+    {},
+    {"dithered": True, "error_feedback": False},
+    {"keep_fraction": 0.5, "exact_keep": True},
+    {"dithered": True, "error_feedback": False, "keep_fraction": 0.3},
+])
+def test_encode_leaf_ef_matches_composed(kwargs):
+    """encode_leaf_ef: the payload is IDENTICAL to encode_leaf under the
+    same key/round, and the residual matches the composed eager
+    u − decode_leaf(encode_leaf(u)) to a few ulp of the embedding scale."""
+    cfg = G.GradCompConfig(bits=2, chunk=64, **kwargs)
+    x = jax.random.normal(jax.random.key(9), (500,))
+    payload, resid = G.encode_leaf_ef(x, 3, cfg, round_idx=5)
+    direct = G.encode_leaf(x, 3, cfg, round_idx=5)
+    assert set(payload) == set(direct)
+    for k in direct:
+        np.testing.assert_array_equal(payload[k], direct[k])
+    decoded = G.decode_leaf(direct, 3, x.size, x.shape, x.dtype, cfg)
+    assert resid.shape == x.shape and resid.dtype == x.dtype
+    np.testing.assert_allclose(resid, x - decoded, atol=5e-6, rtol=0)

@@ -6,6 +6,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import fwht as fwht_kernel
+from repro.kernels import ops as kernel_ops
+from repro.kernels import quantencode as qe_kernel
 from repro.kernels import quantpack as qp_kernel
 from repro.kernels import ref
 
@@ -120,3 +122,117 @@ def test_packed_size():
     assert ref.quantize_pack(x, s, 4).shape == (2, 8)
     assert ref.quantize_pack(x, s, 1).shape == (2, 2)
     assert ref.quantize_pack(x, s, 8).shape == (2, 16)
+
+
+# ---------------------------------------------------------------------------
+# fused encode (sign-flip → FWHT → scale → quantize → pack) vs composed ref
+# ---------------------------------------------------------------------------
+def _signs(n, seed=7):
+    b = jax.random.bernoulli(jax.random.key(seed), 0.5, (n,))
+    return jnp.where(b, 1.0, -1.0).astype(jnp.float32)
+
+
+def _draws(rows, n, bits, seed=11):
+    kd, km = jax.random.split(jax.random.key(seed))
+    delta = 2.0 / (2 ** bits)
+    dither = jax.random.uniform(kd, (rows, n), jnp.float32,
+                                -delta / 2, delta / 2)
+    mask = (jax.random.uniform(km, (rows, 1)) < 0.6).astype(jnp.float32)
+    return dither, mask
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4, 8])
+@pytest.mark.parametrize("rows,n", [(1, 32), (8, 128), (13, 256)])
+@pytest.mark.parametrize("mode", ["det", "dither", "mask", "dither_mask"])
+def test_fused_encode_payload_bitexact(bits, rows, n, mode):
+    """The PAYLOAD contract: fused-kernel (words, scale) == composed ref,
+    bit for bit — deterministically and with shared pre-drawn draws."""
+    x = jax.random.normal(jax.random.key(bits * 100 + rows), (rows, n))
+    signs = _signs(n)
+    dither, mask = _draws(rows, n, bits)
+    dth = dither if "dither" in mode else None
+    msk = mask if "mask" in mode else None
+    kw, ks = qe_kernel.encode_pallas(x, signs, bits, dither=dth, mask=msk,
+                                     interpret=True)
+    rw, rs = ref.encode(x, signs, bits, dither=dth, mask=msk)
+    np.testing.assert_array_equal(kw, rw)
+    np.testing.assert_array_equal(np.asarray(ks).view(np.int32),
+                                  np.asarray(rs).view(np.int32))
+
+
+@pytest.mark.parametrize("bits", [1, 4])
+@pytest.mark.parametrize("rows,n", [(5, 128), (13, 64)])
+@pytest.mark.parametrize("mode", ["det", "dither_mask", "rescale"])
+def test_fused_encode_ef_residual(bits, rows, n, mode):
+    """The EF contract: payload stays bitwise; the in-tile residual matches
+    the composed eager reference u − D(E(u)) to a few f32 ulp of the
+    embedding scale (fma contraction in the in-tile decode is allowed)."""
+    x = jax.random.normal(jax.random.key(bits * 10 + rows), (rows, n))
+    signs = _signs(n)
+    dither, mask = _draws(rows, n, bits)
+    dth = dither if mode != "det" else None
+    msk = mask if mode != "det" else None
+    rescale = 0.6 if mode == "rescale" else None
+    kw, ks, kr = qe_kernel.encode_ef_pallas(
+        x, signs, bits, dither=dth, mask=msk, rescale=rescale,
+        interpret=True)
+    rw, rs, rr = ref.encode_ef(x, signs, bits, dither=dth, mask=msk,
+                               rescale=rescale)
+    np.testing.assert_array_equal(kw, rw)
+    np.testing.assert_array_equal(np.asarray(ks).view(np.int32),
+                                  np.asarray(rs).view(np.int32))
+    np.testing.assert_allclose(kr, rr, atol=4e-6, rtol=0)
+    # composed end-to-end: residual really is u − decode(encode(u))
+    y_hat = ref.decode_embedded(rw, rs, signs, bits, n, mask=msk,
+                                rescale=rescale)
+    np.testing.assert_allclose(kr, x - y_hat, atol=4e-6, rtol=0)
+
+
+def test_fused_encode_ef_residual_dtype_rounding():
+    """residual_dtype=bf16 rounds ŷ where a bf16 tree decode would; the
+    residual then matches the reference to bf16 resolution."""
+    rows, n, bits = 6, 128, 4
+    x = jax.random.normal(jax.random.key(3), (rows, n))
+    signs = _signs(n)
+    _, _, kr = qe_kernel.encode_ef_pallas(
+        x, signs, bits, residual_dtype=jnp.bfloat16, interpret=True)
+    _, _, rr = ref.encode_ef(x, signs, bits, residual_dtype=jnp.bfloat16)
+    np.testing.assert_allclose(kr, rr, atol=4e-3, rtol=0)
+
+
+def test_fused_encode_interpret_inferred_on_cpu():
+    """interpret=None must infer interpreter mode off-TPU (satellite #2):
+    the call below would crash trying to compile a TPU kernel otherwise."""
+    x = jax.random.normal(jax.random.key(4), (4, 64))
+    kw, ks = qe_kernel.encode_pallas(x, _signs(64), 2)
+    rw, rs = ref.encode(x, _signs(64), 2)
+    np.testing.assert_array_equal(kw, rw)
+    got = fwht_kernel.fwht_pallas(x)
+    np.testing.assert_allclose(got, ref.fwht(x), rtol=1e-5, atol=1e-5)
+
+
+def test_forced_pallas_refuses_silent_fallback(monkeypatch):
+    """REPRO_FORCE_PALLAS=1 + N over the VMEM budget must raise, not
+    silently hand back the jnp reference (satellite #1)."""
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    big = fwht_kernel.MAX_VMEM_N * 2
+    x = jnp.zeros((2, big))
+    with pytest.raises(ValueError, match="VMEM"):
+        kernel_ops.fwht(x)
+    with pytest.raises(ValueError, match="VMEM"):
+        kernel_ops.encode(x, jnp.ones((big,)), 2)
+    with pytest.raises(ValueError, match="VMEM"):
+        kernel_ops.encode_ef(x, jnp.ones((big,)), 2)
+    # under the budget the forced path still dispatches to the kernel
+    small = jax.random.normal(jax.random.key(5), (3, 64))
+    kw, _ = kernel_ops.encode(small, _signs(64), 4)
+    rw, _ = ref.encode(small, _signs(64), 4)
+    np.testing.assert_array_equal(kw, rw)
+
+
+def test_unforced_large_n_falls_back_to_ref(monkeypatch):
+    """Without the force flag, over-budget N quietly uses the reference."""
+    monkeypatch.delenv("REPRO_FORCE_PALLAS", raising=False)
+    x = jax.random.normal(jax.random.key(6), (1, fwht_kernel.MAX_VMEM_N * 2))
+    np.testing.assert_allclose(kernel_ops.fwht(x), ref.fwht(x),
+                               rtol=1e-5, atol=1e-5)
