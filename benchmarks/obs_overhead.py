@@ -1,0 +1,105 @@
+"""Gate: obs instrumentation overhead on the cohort round loop < 2%.
+
+    PYTHONPATH=src python -m benchmarks.obs_overhead
+
+The `repro.obs` contract is zero-overhead-when-disabled and cheap-when-
+enabled: spans and counters live entirely on the host side of the jit
+boundary, so an instrumented round adds only perf_counter reads and dict
+appends around the device dispatch. This benchmark measures both arms on
+the fed_cohort round loop (the hottest instrumented driver — one
+`fed.round` span + ~13 host-side events per round).
+
+Methodology — the effect is percent-level on a ~10 ms round, well below
+CPU frequency/scheduler drift between separate timing windows, so the two
+arms are PAIRED: one Federation, one compiled program cache, rounds
+alternating between `obs.suspended()` (blanks the ambient session —
+benchmarks.run executes every benchmark under obs, so without the blanking
+the "disabled" arm would silently be enabled) and an enabled session
+activated via `obs.use()`. Slow drift then hits both arms equally and
+cancels in the ratio. Each round is individually timed through a
+`block_until_ready` on the updated server params, so neither arm can hide
+device work in the async dispatch queue; compile time is excluded by a
+warmup round per arm. The written trace.json is schema-validated before
+the gate. Raises if the enabled/disabled time ratio exceeds `threshold`.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import print_table
+from benchmarks.fed_heterogeneous import make_problem
+from repro.fed import ClientConfig, FedConfig, Federation, ServerConfig, registry
+from repro.obs import core as obs_lib
+from repro.obs import trace as trace_lib
+from repro.obs.sinks import MemorySink
+
+
+def _one_round(fed, cfg, t: int) -> float:
+    t0 = time.perf_counter()
+    fed.run_round(cfg, t)
+    jax.block_until_ready(fed.server.params)
+    return time.perf_counter() - t0
+
+
+def run(m: int = 32, dim: int = 96, per_client: int = 32, rounds: int = 60,
+        chunk: int = 32, threshold: float = 0.02, seed: int = 0) -> dict:
+    """`rounds` timed rounds PER ARM, interleaved round-by-round."""
+    shards, loss_fn, _, _, lr = make_problem(m, dim, per_client=per_client,
+                                             scale_span=0.0, seed=seed)
+    fed = Federation(loss_fn, {"x": jnp.zeros(dim)}, shards,
+                     registry.make("ndsc", 2.0, chunk=chunk),
+                     ClientConfig(local_steps=1, lr=lr), ServerConfig(),
+                     seed=seed)
+    cfg = FedConfig(num_rounds=2 * rounds + 2, seed=seed)
+
+    trace_path = os.path.join(tempfile.mkdtemp(prefix="obs_overhead_"),
+                              "trace.json")
+    session = obs_lib.Obs(sinks=(MemorySink(),
+                                 trace_lib.ChromeTraceSink(trace_path)))
+    # warmup: compile the cohort round program and touch both arms' paths
+    with obs_lib.suspended():
+        fed.run_round(cfg, 0)
+    with obs_lib.use(session):
+        fed.run_round(cfg, 1)
+
+    t_off, t_on = [], []
+    for t in range(2, 2 * rounds + 2):
+        if t % 2 == 0:
+            with obs_lib.suspended():
+                t_off.append(_one_round(fed, cfg, t))
+        else:
+            with obs_lib.use(session):
+                t_on.append(_one_round(fed, cfg, t))
+    session.close()
+
+    n_events = trace_lib.validate_trace(trace_path)
+    # trimmed means: drop the slowest 10% per arm (GC pauses / scheduler
+    # preemption land on single rounds and are not what's being gated)
+    keep = max(1, int(round(len(t_off) * 0.9)))
+    mean_off = sum(sorted(t_off)[:keep]) / keep
+    mean_on = sum(sorted(t_on)[:keep]) / keep
+    overhead = mean_on / mean_off - 1.0
+    print_table(
+        "obs overhead on the cohort round loop (paired rounds)",
+        ("arm", "s/round (10% trimmed mean)", "events"),
+        [("disabled", f"{mean_off * 1e3:.3f} ms", "-"),
+         ("enabled", f"{mean_on * 1e3:.3f} ms", n_events),
+         ("overhead", f"{overhead * 100:+.2f}%", f"gate < {threshold:.0%}")])
+    if overhead >= threshold:
+        raise AssertionError(
+            f"obs overhead {overhead:.2%} >= {threshold:.0%} "
+            f"(disabled {mean_off * 1e3:.3f} ms/round, "
+            f"enabled {mean_on * 1e3:.3f} ms/round)")
+    recompiles = session.summary()["recompiles"]
+    return {"overhead": round(overhead, 5), "threshold": threshold,
+            "s_per_round_disabled": mean_off, "s_per_round_enabled": mean_on,
+            "trace_events": n_events, "recompiles": recompiles}
+
+
+if __name__ == "__main__":
+    run()

@@ -11,6 +11,14 @@ continues (nonzero exit at the end if anything failed). `--tiny` substitutes
 CPU-tiny kwargs for the CI smoke lane; `--json` writes per-benchmark
 wall-time + the headline result for the perf-trajectory artifact.
 
+Every benchmark executes inside its own `repro.obs` session, so the --json
+payload carries a per-benchmark `obs` summary (span timings, dispatch
+counters, recompile counts) next to the headline metric, plus a top-level
+`schema_version` and `env` block (jax/jaxlib versions, backend, devices)
+that make payloads comparable across commits and machines. `--obs DIR`
+additionally writes `<name>.events.jsonl` and `<name>.trace.json`
+(Perfetto-loadable) per benchmark into DIR.
+
 The multi-pod dry-run HLO table is produced separately by
 `python -m repro.launch.dryrun --sweep` (it needs a 512-device process) and
 formatted by benchmarks.hlo_report (formerly misnamed benchmarks.roofline;
@@ -21,9 +29,17 @@ from __future__ import annotations
 import argparse
 import importlib
 import json
+import os
+import platform
 import sys
 import time
 import traceback
+
+from repro.obs import core as obs_lib
+
+# Version of the --json payload layout. Bump when records/env/obs keys
+# change shape, so the perf-trajectory tooling can branch on it.
+SCHEMA_VERSION = 2
 
 # benchmark name -> module under benchmarks/ exposing run(**kwargs)
 ALL = {
@@ -43,6 +59,7 @@ ALL = {
     "appN": "appN_aspect_ratio",
     "lemma4": "lemma4_covering",
     "modelscale": "modelscale_ablation",
+    "obs_overhead": "obs_overhead",
 }
 
 # --tiny kwargs: small enough for the CI smoke lane, large enough that each
@@ -58,7 +75,31 @@ TINY = {
                            rows=16, reps=1),
     "table1": dict(n=256, trials=5),
     "fig1c": dict(dims=(128, 256, 512)),
+    "obs_overhead": dict(m=8, dim=48, per_client=16, rounds=30,
+                         threshold=0.10),
 }
+
+
+def env_info() -> dict:
+    """The environment fingerprint embedded in every --json payload."""
+    info = {
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "repro_force_pallas": os.environ.get("REPRO_FORCE_PALLAS"),
+    }
+    try:
+        import jax
+        import jaxlib
+        info["jax"] = jax.__version__
+        info["jaxlib"] = jaxlib.__version__
+        info["backend"] = jax.default_backend()
+        devs = jax.devices()
+        info["device_kind"] = devs[0].device_kind if devs else None
+        info["device_count"] = len(devs)
+    except Exception as exc:                       # pragma: no cover
+        info["jax"] = None
+        info["error"] = repr(exc)
+    return info
 
 
 def _jsonable(obj, depth: int = 0):
@@ -78,20 +119,33 @@ def _jsonable(obj, depth: int = 0):
     return str(obj)
 
 
-def run_one(name: str, tiny: bool = False) -> dict:
+def run_one(name: str, tiny: bool = False, obs_dir: str = None) -> dict:
     """Import + run one benchmark; never raises — failures land in the
-    record (`ok`/`error`) so the rest of the run proceeds."""
+    record (`ok`/`error`) so the rest of the run proceeds.
+
+    Each benchmark gets its own obs session; its summary lands in the
+    record under "obs". With `obs_dir` the raw events and a Perfetto trace
+    are written there as `<name>.events.jsonl` / `<name>.trace.json`."""
     rec = {"name": name, "ok": False, "seconds": None, "headline": None,
-           "error": None}
-    t0 = time.time()
+           "error": None, "obs": None}
+    jsonl = trace = None
+    if obs_dir is not None:
+        os.makedirs(obs_dir, exist_ok=True)
+        jsonl = os.path.join(obs_dir, f"{name}.events.jsonl")
+        trace = os.path.join(obs_dir, f"{name}.trace.json")
+    session = obs_lib.enable(jsonl=jsonl, trace=trace)
+    t0 = time.perf_counter()
     try:
         mod = importlib.import_module(f"benchmarks.{ALL[name]}")
         kwargs = TINY.get(name, {}) if tiny else {}
-        rec["headline"] = _jsonable(mod.run(**kwargs))
+        with obs_lib.span(f"bench.{name}", tiny=tiny):
+            rec["headline"] = _jsonable(mod.run(**kwargs))
         rec["ok"] = True
     except Exception:
         rec["error"] = traceback.format_exc(limit=8)
-    rec["seconds"] = round(time.time() - t0, 3)
+    rec["seconds"] = round(time.perf_counter() - t0, 3)
+    obs_lib.disable()
+    rec["obs"] = _jsonable(session.summary())
     return rec
 
 
@@ -107,6 +161,10 @@ def main(argv=None) -> None:
     parser.add_argument("--json", metavar="PATH", default=None,
                         help="write per-benchmark wall-time + headline "
                              "metric to PATH")
+    parser.add_argument("--obs", metavar="DIR", default=None,
+                        help="write per-benchmark obs artifacts "
+                             "(<name>.events.jsonl, <name>.trace.json) "
+                             "into DIR")
     args = parser.parse_args(argv)
     unknown = [n for n in args.names if n not in ALL]
     if unknown:
@@ -116,7 +174,7 @@ def main(argv=None) -> None:
 
     records = []
     for name in names:
-        rec = run_one(name, tiny=args.tiny)
+        rec = run_one(name, tiny=args.tiny, obs_dir=args.obs)
         records.append(rec)
         if rec["ok"]:
             print(f"[{name} done in {rec['seconds']:.1f}s]")
@@ -127,7 +185,9 @@ def main(argv=None) -> None:
     failed = [r["name"] for r in records if not r["ok"]]
     if args.json:
         payload = {
+            "schema_version": SCHEMA_VERSION,
             "tiny": args.tiny,
+            "env": env_info(),
             "total_seconds": round(sum(r["seconds"] for r in records), 3),
             "failed": failed,
             "benchmarks": records,

@@ -24,6 +24,16 @@ Consensus strategies (GradCompConfig.strategy):
 
 Error feedback is per-worker: e ← (g + e) − D(E(g + e)), decoded from the
 worker's OWN payload, so EF never needs extra communication.
+
+Observability: the returned step callables carry host-side
+instrumentation — with a `repro.obs` session active, each call runs under
+a "dist.step" span and emits per-step counters for the ANALYTIC per-worker
+payload bytes (from `gradcomp.wire_bytes_tree`, computed once at factory
+time — never from inside the compiled program). Disabled, the wrapper is
+one global load per call; the underlying jit program, its `lower` method
+and its compile cache are reachable via the wrapper (`_jitted`), and the
+program registers with `obs.recompile` so compile counts are attributable.
+Numerics are untouched either way (bit-exactness regression-tested).
 """
 from __future__ import annotations
 
@@ -40,6 +50,8 @@ from repro.dist.sharding import (data_axes_for, data_axis_names, num_workers,
                                  param_specs)
 from repro.models import decode as decode_lib
 from repro.models import model as model_lib
+from repro.obs import core as obs_lib
+from repro.obs import recompile as recompile_lib
 from repro.optimizer.optim import (apply_updates, clip_by_global_norm,
                                    global_norm)
 
@@ -70,6 +82,43 @@ def _lead_axes(axes):
     if not axes:
         return None
     return axes if len(axes) > 1 else axes[0]
+
+
+def _analytic_payload_bytes(cfg, gc: G.GradCompConfig, mesh):
+    """Per-worker bytes-on-wire per step, from the analytic audit over the
+    model's parameter template (None when the template can't be built, e.g.
+    a custom loss over non-model params)."""
+    try:
+        p_shapes = jax.eval_shape(
+            lambda: model_lib.init_params(jax.random.key(0), cfg))
+        wire = G.wire_bytes_tree(p_shapes, gc, num_workers(mesh))
+        if gc.strategy == "psum":
+            return float(wire["f32_bytes"])
+        return float(wire["payload_bytes"])
+    except Exception:
+        return None
+
+
+def _with_obs(fn, name: str, gc: G.GradCompConfig, payload_bytes):
+    """Host-side instrumentation around a jit'd train step. The wrapper is
+    call-transparent (same signature, same outputs); `lower` and the
+    compile cache stay reachable for the dry-run launcher and the tests."""
+    recompile_lib.register(name, fn)
+
+    def stepper(params, opt_state, ef, batch):
+        if not obs_lib.enabled():
+            return fn(params, opt_state, ef, batch)
+        with obs_lib.span(name, strategy=gc.strategy):
+            out = fn(params, opt_state, ef, batch)
+        obs_lib.counter("dist.steps", 1, strategy=gc.strategy)
+        if payload_bytes is not None:
+            obs_lib.counter("dist.payload_bytes", payload_bytes,
+                            strategy=gc.strategy)
+        return out
+
+    stepper.lower = fn.lower
+    stepper._jitted = fn
+    return stepper
 
 
 # ---------------------------------------------------------------------------
@@ -160,7 +209,8 @@ def make_train_step(cfg, opt, gc: G.GradCompConfig, mesh, clip_norm=None,
                    in_specs=(P(), P(), ef_spec, batch_spec),
                    out_specs=(P(), P(), ef_spec, P()),
                    axis_names=set(mesh.axis_names))
-    return jax.jit(fn)
+    return _with_obs(jax.jit(fn), "dist.step", gc,
+                     _analytic_payload_bytes(cfg, gc, mesh))
 
 
 def _ef_shapes(params_shapes, gc: G.GradCompConfig, m: int):
@@ -309,7 +359,8 @@ def make_zero_train_step(cfg, opt, gc: G.GradCompConfig, mesh,
                    in_specs=(owned_spec, opt_spec, ef_spec, batch_spec),
                    out_specs=(owned_spec, opt_spec, ef_spec, P()),
                    axis_names=set(mesh.axis_names))
-    return jax.jit(fn)
+    return _with_obs(jax.jit(fn), "dist.step.zero1", gc,
+                     _analytic_payload_bytes(cfg, gc, mesh))
 
 
 def zero_state_specs(cfg, opt, gc: G.GradCompConfig, mesh):
@@ -360,7 +411,9 @@ def init_zero_state(cfg, opt, gc: G.GradCompConfig, mesh, key=None):
 # ---------------------------------------------------------------------------
 def make_serve_step(cfg, mesh):
     """jit'd (params, DecodeState, tokens (B,1)) → (logits (B,V), state)."""
-    return jax.jit(functools.partial(decode_lib.decode_step, cfg))
+    return recompile_lib.register(
+        "dist.serve_step",
+        jax.jit(functools.partial(decode_lib.decode_step, cfg)))
 
 
 def serve_state_specs(cfg, mesh, global_batch: int, seq_len: int):

@@ -54,6 +54,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.obs import recompile as recompile_lib
 from repro.dist.sharding import (data_axis_names, lane_pspec, num_workers,
                                  padded_lanes)
 from repro.fed import clients as clients_lib
@@ -145,9 +146,11 @@ def _mesh_mean_fn(mesh, sum_mode: str, lanes: int):
 
         in_specs = (lane, lane)
 
-    return jax.jit(shard_map(fold, mesh=mesh, in_specs=in_specs,
-                             out_specs=P(),
-                             axis_names=set(mesh.axis_names)))
+    return recompile_lib.register(
+        "fed.aggregate.mesh",
+        jax.jit(shard_map(fold, mesh=mesh, in_specs=in_specs,
+                          out_specs=P(),
+                          axis_names=set(mesh.axis_names))))
 
 
 def _place_lanes(tree, mesh):

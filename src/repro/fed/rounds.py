@@ -59,9 +59,23 @@ Round lifecycle (README has the diagram):
 
 Dropped/unsampled clients keep their EF memory and PRNG lane untouched —
 they never encoded, so there is nothing to feed back (straggler semantics).
+
+Observability (`repro.obs`): when a session is active, `run_round` emits
+host-side spans for the realloc / client-compute / decode / aggregate
+stages plus counters and gauges sourced from the round record (realized
+vs analytic wire bytes, participant / straggler / cohort counts, lane
+histograms) — never from inside jit. Every compiled program registers
+with `obs.recompile` under a stable name ("fed.round.cohort", …) so
+compile churn is attributable per program. The hard contract, regression-
+tested in tests/test_obs_bitexact.py: enabling obs leaves params, EF
+states, the ledger and the history BIT-EXACT and adds ZERO recompiles —
+spans only time the host's view of each (async) dispatch. `run(...,
+obs=session)` opt-in activates a session for the run's duration and
+emits a run-level summary event.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Callable, Optional, Sequence
 
@@ -72,6 +86,8 @@ from repro.fed import budget as budget_lib
 from repro.fed import clients as clients_lib
 from repro.fed import mesh as mesh_lib
 from repro.fed import server as server_lib
+from repro.obs import core as obs_lib
+from repro.obs import recompile as recompile_lib
 
 BACKENDS = ("vmap", "mesh")
 
@@ -237,9 +253,10 @@ class Federation:
         for i in range(m):
             k = self._fn_key(i)
             if k not in self._round_fns:
-                self._round_fns[k] = clients_lib.make_client_round(
-                    self.loss_fn, self.codecs[i], self.client_cfgs[i],
-                    self.server.params)
+                self._round_fns[k] = recompile_lib.register(
+                    "fed.round.scalar", clients_lib.make_client_round(
+                        self.loss_fn, self.codecs[i], self.client_cfgs[i],
+                        self.server.params))
         self._fn_of = [self._round_fns[self._fn_key(i)] for i in range(m)]
         self._cohort_keys = [
             cohort_key(self.codecs[i], self.client_cfgs[i], self.datas[i])
@@ -308,7 +325,8 @@ class Federation:
                 decoded = jax.vmap(lambda w: codec.decode(w, meta))(wires)
                 return decoded, server_lib.stacked_norms(decoded)
 
-            fn = jax.jit(decode_cohort)
+            fn = recompile_lib.register("fed.decode.cohort",
+                                        jax.jit(decode_cohort))
             self._cohort_decode_fns[key] = fn
         return fn
 
@@ -325,7 +343,8 @@ class Federation:
                 return (jax.tree.map(lambda x: x[None], decoded),
                         server_lib.tree_norm(decoded)[None])
 
-            fn = jax.jit(decode_one)
+            fn = recompile_lib.register("fed.decode.scalar",
+                                        jax.jit(decode_one))
             self._decode_fns[k] = fn
         return fn
 
@@ -372,10 +391,13 @@ class Federation:
                 groups.append((members, decoded, norms))
             else:
                 for i in members:
-                    wires_of[i], self.states[i] = self._fn_of[i](
-                        self.server.params, self.datas[i], self.states[i],
-                        round_idx)
-                    decoded1, norm1 = self._scalar_decode(i)(wires_of[i])
+                    with obs_lib.span("fed.clients.compute", lanes=1,
+                                      path="scalar"):
+                        wires_of[i], self.states[i] = self._fn_of[i](
+                            self.server.params, self.datas[i],
+                            self.states[i], round_idx)
+                    with obs_lib.span("fed.decode", lanes=1, path="scalar"):
+                        decoded1, norm1 = self._scalar_decode(i)(wires_of[i])
                     groups.append(([i], decoded1, norm1))
         return wires_of, groups
 
@@ -384,9 +406,10 @@ class Federation:
         fn = self._cohort_fns.get(key)
         if fn is None:
             i0 = members[0]
-            fn = clients_lib.make_cohort_round(
-                self.loss_fn, self.codecs[i0], self.client_cfgs[i0],
-                self.server.params)
+            fn = recompile_lib.register(
+                "fed.round.cohort", clients_lib.make_cohort_round(
+                    self.loss_fn, self.codecs[i0], self.client_cfgs[i0],
+                    self.server.params))
             self._cohort_fns[key] = fn
         # shards never change, so the stack is reusable whenever the
         # cohort's membership repeats (always, at full participation); one
@@ -400,8 +423,12 @@ class Federation:
             data = clients_lib.stack_trees([self.datas[i] for i in members])
             self._stacked_data[key] = (mtuple, data)
         state = clients_lib.stack_trees([self.states[i] for i in members])
-        wires, new_states = fn(self.server.params, data, state, round_idx)
-        decoded, norms = self._cohort_decode(key, members[0])(wires)
+        with obs_lib.span("fed.clients.compute", lanes=len(members),
+                          path="vmap"):
+            wires, new_states = fn(self.server.params, data, state,
+                                   round_idx)
+        with obs_lib.span("fed.decode", lanes=len(members), path="vmap"):
+            decoded, norms = self._cohort_decode(key, members[0])(wires)
         return wires, new_states, decoded, norms
 
     def _run_cohort_mesh(self, key, members: Sequence[int], round_idx: int):
@@ -420,9 +447,10 @@ class Federation:
         fn = self._mesh_fns.get(key)
         if fn is None:
             i0 = members[0]
-            fn = mesh_lib.make_mesh_cohort_round(
-                self.loss_fn, self.codecs[i0], self.client_cfgs[i0],
-                self.server.params, self.mesh)
+            fn = recompile_lib.register(
+                "fed.round.mesh", mesh_lib.make_mesh_cohort_round(
+                    self.loss_fn, self.codecs[i0], self.client_cfgs[i0],
+                    self.server.params, self.mesh))
             self._mesh_fns[key] = fn
         mtuple = (tuple(members), total)
         cached = self._stacked_data.get(key)
@@ -434,8 +462,10 @@ class Federation:
             self._stacked_data[key] = (mtuple, data)
         state = clients_lib.stack_padded(
             [self.states[i] for i in members], total)
-        wires, new_states, decoded, norms = fn(self.server.params, data,
-                                               state, round_idx)
+        with obs_lib.span("fed.clients.compute", lanes=len(members),
+                          padded=total, path="mesh"):
+            wires, new_states, decoded, norms = fn(self.server.params, data,
+                                                   state, round_idx)
         if total != n:
             wires = jax.tree.map(lambda a: a[:n], wires)
             new_states = jax.tree.map(lambda a: a[:n], new_states)
@@ -460,9 +490,20 @@ class Federation:
         return stacked, order, norms
 
     def run_round(self, cfg: FedConfig, round_idx: int) -> dict:
-        realloc = self._maybe_reallocate(round_idx)
+        with obs_lib.span("fed.round", round=round_idx,
+                          backend=self.backend):
+            rec, groups = self._run_round(cfg, round_idx)
+        if obs_lib.enabled():
+            self._emit_round_obs(rec, groups)
+        return rec
+
+    def _run_round(self, cfg: FedConfig, round_idx: int) -> tuple:
+        with obs_lib.span("fed.round.realloc"):
+            realloc = self._maybe_reallocate(round_idx)
         participants, stragglers = self.sample_participants(cfg, round_idx)
-        wires_of, groups = self._run_clients(participants, round_idx)
+        with obs_lib.span("fed.round.clients",
+                          participants=len(participants)):
+            wires_of, groups = self._run_clients(participants, round_idx)
         realized = analytic = 0.0
         for i in participants:
             realized += self.codecs[i].wire_bytes(wires_of[i], self.metas[i])
@@ -472,59 +513,82 @@ class Federation:
             slot_weights = (self._weights(cfg, range(self.num_clients))
                             if (self.server_cfg.aggregator == "fedmem"
                                 and cfg.weighting != "uniform") else None)
-            if (self.backend == "mesh" and self.use_cohorts
-                    and len(groups) == 1
-                    and groups[0][0] == list(participants)):
-                # single-cohort fast path (the whole round is one mesh
-                # program, e.g. full participation of a homogeneous
-                # population): the padded, lane-sharded decoded stack feeds
-                # the collective fold directly — no slice, no reshard
-                members, padded, norms = groups[0]
-                if self._ema is not None:
-                    self._ema.update(members, np.asarray(
-                        jax.device_get(norms), np.float64))
+            with obs_lib.span("fed.round.aggregate",
+                              aggregator=self.server_cfg.aggregator,
+                              participants=len(participants)):
+                self._aggregate(groups, participants, weights, slot_weights)
+        return ({"round": round_idx, "participants": participants,
+                 "stragglers": stragglers, "wire_bytes": realized,
+                 "analytic_bytes": analytic, "realloc": realloc,
+                 "rates": (self._rates.tolist()
+                           if self._rates is not None else None)},
+                groups)
+
+    def _aggregate(self, groups, participants, weights,
+                   slot_weights) -> None:
+        if (self.backend == "mesh" and self.use_cohorts
+                and len(groups) == 1
+                and groups[0][0] == list(participants)):
+            # single-cohort fast path (the whole round is one mesh
+            # program, e.g. full participation of a homogeneous
+            # population): the padded, lane-sharded decoded stack feeds
+            # the collective fold directly — no slice, no reshard
+            members, padded, norms = groups[0]
+            if self._ema is not None:
+                self._ema.update(members, np.asarray(
+                    jax.device_get(norms), np.float64))
+            self.server = mesh_lib.aggregate_stacked_mesh(
+                self.server, self.server_cfg, padded, weights,
+                self.mesh, participants, slot_weights=slot_weights,
+                lanes=len(participants))
+        elif self.use_cohorts:
+            if self.backend == "mesh":
+                # multi-group join: strip each mesh cohort's padding
+                # before the concat + participant-order gather
+                groups = [(mem, jax.tree.map(
+                    lambda a, k=len(mem): a[:k], dec), nr)
+                    for mem, dec, nr in groups]
+            stacked, order, norms = self._combine_groups(groups,
+                                                         participants)
+            if self._ema is not None:
+                self._ema.update(order, np.asarray(
+                    jax.device_get(norms), np.float64))
+            if self.backend == "mesh":
                 self.server = mesh_lib.aggregate_stacked_mesh(
-                    self.server, self.server_cfg, padded, weights,
-                    self.mesh, participants, slot_weights=slot_weights,
-                    lanes=len(participants))
-            elif self.use_cohorts:
-                if self.backend == "mesh":
-                    # multi-group join: strip each mesh cohort's padding
-                    # before the concat + participant-order gather
-                    groups = [(mem, jax.tree.map(
-                        lambda a, k=len(mem): a[:k], dec), nr)
-                        for mem, dec, nr in groups]
-                stacked, order, norms = self._combine_groups(groups,
-                                                             participants)
-                if self._ema is not None:
-                    self._ema.update(order, np.asarray(
-                        jax.device_get(norms), np.float64))
-                if self.backend == "mesh":
-                    self.server = mesh_lib.aggregate_stacked_mesh(
-                        self.server, self.server_cfg, stacked, weights,
-                        self.mesh, participants, slot_weights=slot_weights)
-                else:
-                    self.server = server_lib.aggregate_stacked(
-                        self.server, self.server_cfg, stacked, weights,
-                        participants, slot_weights=slot_weights)
+                    self.server, self.server_cfg, stacked, weights,
+                    self.mesh, participants, slot_weights=slot_weights)
             else:
-                # PR-2 list-layout reference: per-participant trees, host
-                # reduction loop (the oracle the stacked path is tested
-                # against; norms come from the same decode programs)
-                deltas = [jax.tree.map(lambda x: x[0], g[1]) for g in groups]
-                if self._ema is not None:
-                    norms = np.concatenate(
-                        [np.asarray(jax.device_get(g[2]), np.float64)
-                         for g in groups])
-                    self._ema.update([g[0][0] for g in groups], norms)
-                self.server = server_lib.aggregate(
-                    self.server, self.server_cfg, deltas, weights,
+                self.server = server_lib.aggregate_stacked(
+                    self.server, self.server_cfg, stacked, weights,
                     participants, slot_weights=slot_weights)
-        return {"round": round_idx, "participants": participants,
-                "stragglers": stragglers, "wire_bytes": realized,
-                "analytic_bytes": analytic, "realloc": realloc,
-                "rates": (self._rates.tolist()
-                          if self._rates is not None else None)}
+        else:
+            # PR-2 list-layout reference: per-participant trees, host
+            # reduction loop (the oracle the stacked path is tested
+            # against; norms come from the same decode programs)
+            deltas = [jax.tree.map(lambda x: x[0], g[1]) for g in groups]
+            if self._ema is not None:
+                norms = np.concatenate(
+                    [np.asarray(jax.device_get(g[2]), np.float64)
+                     for g in groups])
+                self._ema.update([g[0][0] for g in groups], norms)
+            self.server = server_lib.aggregate(
+                self.server, self.server_cfg, deltas, weights,
+                participants, slot_weights=slot_weights)
+
+    def _emit_round_obs(self, rec: dict, groups: Sequence) -> None:
+        """Round metrics, sourced from the finished round RECORD (and the
+        host-side cohort bookkeeping) — never from inside jit."""
+        obs_lib.counter("fed.rounds", 1)
+        obs_lib.counter("fed.wire_bytes", rec["wire_bytes"])
+        obs_lib.counter("fed.analytic_bytes", rec["analytic_bytes"])
+        obs_lib.counter("fed.stragglers", len(rec["stragglers"]))
+        if rec["realloc"]:
+            obs_lib.counter("fed.reallocs", 1)
+        obs_lib.gauge("fed.participants", len(rec["participants"]),
+                      round=rec["round"])
+        obs_lib.gauge("fed.cohorts", len(groups), round=rec["round"])
+        for members, _, _ in groups:
+            obs_lib.histogram("fed.cohort_lanes", len(members))
 
     def _weights(self, cfg: FedConfig, participants) -> np.ndarray:
         if cfg.weighting == "data_size":
@@ -534,7 +598,8 @@ class Federation:
 
     # -- full run ------------------------------------------------------------
     def run(self, cfg: FedConfig,
-            eval_fn: Optional[Callable[[Any], float]] = None) -> dict:
+            eval_fn: Optional[Callable[[Any], float]] = None,
+            obs: Optional[obs_lib.Obs] = None) -> dict:
         """Drive `cfg.num_rounds` rounds; returns the per-round history.
 
         Rounds start at `self.rounds_done` (0 on a fresh federation), so a
@@ -543,27 +608,50 @@ class Federation:
         participant draws, codec salts and re-allocation boundaries — as an
         uninterrupted run (bit-exact, regression-tested).
 
+        `obs` opt-in activates a `repro.obs` session for the duration of
+        the run (per-round spans, wire-byte counters, a run-level summary
+        event); an already-active global session instruments the run the
+        same way without passing anything. The history — like params, EF
+        and the ledger — is BIT-EXACT with and without obs.
+
         history keys: round, loss (if eval_fn), wire_bytes, analytic_bytes,
         cum_bytes, participants, stragglers, realloc, rates.
         """
-        hist = {k: [] for k in ("round", "loss", "wire_bytes",
-                                "analytic_bytes", "cum_bytes",
-                                "participants", "stragglers", "realloc",
-                                "rates")}
-        cum = 0.0
-        start = self.rounds_done
-        for t in range(start, start + cfg.num_rounds):
-            rec = self.run_round(cfg, t)
-            self.rounds_done = t + 1
-            cum += rec["wire_bytes"]
-            hist["round"].append(t)
-            hist["wire_bytes"].append(rec["wire_bytes"])
-            hist["analytic_bytes"].append(rec["analytic_bytes"])
-            hist["cum_bytes"].append(cum)
-            hist["participants"].append(rec["participants"])
-            hist["stragglers"].append(rec["stragglers"])
-            hist["realloc"].append(rec["realloc"])
-            hist["rates"].append(rec["rates"])
-            if eval_fn is not None:
-                hist["loss"].append(float(eval_fn(self.server.params)))
+        ctx = obs_lib.use(obs) if obs is not None else contextlib.nullcontext()
+        with ctx:
+            hist = {k: [] for k in ("round", "loss", "wire_bytes",
+                                    "analytic_bytes", "cum_bytes",
+                                    "participants", "stragglers", "realloc",
+                                    "rates")}
+            cum = 0.0
+            start = self.rounds_done
+            with obs_lib.span("fed.run", rounds=cfg.num_rounds,
+                              start=start, backend=self.backend):
+                for t in range(start, start + cfg.num_rounds):
+                    rec = self.run_round(cfg, t)
+                    self.rounds_done = t + 1
+                    cum += rec["wire_bytes"]
+                    hist["round"].append(t)
+                    hist["wire_bytes"].append(rec["wire_bytes"])
+                    hist["analytic_bytes"].append(rec["analytic_bytes"])
+                    hist["cum_bytes"].append(cum)
+                    hist["participants"].append(rec["participants"])
+                    hist["stragglers"].append(rec["stragglers"])
+                    hist["realloc"].append(rec["realloc"])
+                    hist["rates"].append(rec["rates"])
+                    if eval_fn is not None:
+                        with obs_lib.span("fed.eval", round=t):
+                            hist["loss"].append(
+                                float(eval_fn(self.server.params)))
+            session = obs_lib.get()
+            if session is not None:
+                session.meta(
+                    "fed.run.summary", rounds=cfg.num_rounds,
+                    start_round=start, backend=self.backend,
+                    clients=self.num_clients,
+                    total_wire_bytes=cum,
+                    total_analytic_bytes=sum(hist["analytic_bytes"]),
+                    stragglers=sum(len(s) for s in hist["stragglers"]),
+                    reallocs=sum(bool(r) for r in hist["realloc"]),
+                    final_loss=(hist["loss"][-1] if hist["loss"] else None))
         return hist

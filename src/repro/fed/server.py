@@ -57,6 +57,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import recompile as recompile_lib
 from repro.optimizer.optim import Optimizer, apply_updates
 
 AGGREGATORS = ("fedavg", "fedopt", "fedmem")
@@ -283,7 +284,9 @@ def _stacked_mean_fn(sum_mode: str):
     distinct size — same behavior as the cohort client programs."""
     wsum = (_sequential_weighted_sum if sum_mode == "sequential"
             else _pairwise_weighted_sum)
-    return jax.jit(lambda stacked, w: wsum(stacked, w / jnp.sum(w)))
+    return recompile_lib.register(
+        "fed.aggregate.mean",
+        jax.jit(lambda stacked, w: wsum(stacked, w / jnp.sum(w))))
 
 
 @functools.lru_cache(maxsize=None)
@@ -306,7 +309,7 @@ def _stacked_memory_fn(has_slot_weights: bool):
             direction = jax.tree.map(lambda m: jnp.mean(m, axis=0), memory)
         return memory, direction
 
-    return jax.jit(fn)
+    return recompile_lib.register("fed.aggregate.memory", jax.jit(fn))
 
 
 def aggregate_stacked(state: ServerState, cfg: ServerConfig, stacked,

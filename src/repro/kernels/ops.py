@@ -9,6 +9,15 @@ Set REPRO_FORCE_PALLAS=1 to force the (interpret-mode on CPU) Pallas path.
 On the forced path a kernel that CANNOT run (e.g. N over the single-tile
 VMEM budget) raises instead of silently substituting the reference — a
 silent fallback would make "forced Pallas" tests vacuous.
+
+Observability: every dispatch decision increments the
+`kernels.dispatch` counter (attrs: op, path "pallas"|"ref", N, forced)
+and a refused forced dispatch increments `kernels.forced_error` BEFORE
+raising — so a CI run under REPRO_FORCE_PALLAS=1 can assert "zero
+reference-fallback events" from the event stream instead of relying on
+the raise alone. These fire at Python call time (i.e. once per trace /
+compilation when called under jit, per call when eager), never inside
+compiled code, and cost one global load when obs is disabled.
 """
 from __future__ import annotations
 
@@ -21,6 +30,7 @@ from repro.kernels import fwht as _fwht_kernel
 from repro.kernels import quantencode as _quantencode_kernel
 from repro.kernels import quantpack as _quantpack_kernel
 from repro.kernels import ref as _ref
+from repro.obs import core as obs
 
 
 def _use_pallas() -> bool:
@@ -33,31 +43,47 @@ def _forced() -> bool:
     return os.environ.get("REPRO_FORCE_PALLAS") == "1"
 
 
+def _count_dispatch(op: str, path: str, n) -> None:
+    obs.counter("kernels.dispatch", 1, op=op, path=path, n=int(n),
+                forced=_forced())
+
+
+def _count_forced_error(op: str, n) -> None:
+    obs.counter("kernels.forced_error", 1, op=op, n=int(n))
+
+
 def fwht(x: jax.Array) -> jax.Array:
     """Normalized Walsh–Hadamard transform along the last axis (power-of-2 len)."""
     if _use_pallas():
         if x.shape[-1] <= _fwht_kernel.MAX_VMEM_N:
+            _count_dispatch("fwht", "pallas", x.shape[-1])
             return _fwht_kernel.fwht_pallas(x)
         if _forced():
+            _count_forced_error("fwht", x.shape[-1])
             raise ValueError(
                 f"REPRO_FORCE_PALLAS=1 but FWHT N={x.shape[-1]} exceeds the "
                 f"single-tile VMEM budget {_fwht_kernel.MAX_VMEM_N}; the "
                 "forced path refuses to silently fall back to the jnp "
                 "reference")
+    _count_dispatch("fwht", "ref", x.shape[-1])
     return _ref.fwht(x)
 
 
 def quantize_pack(x: jax.Array, scale: jax.Array, bits: int) -> jax.Array:
     """Fused uniform-quantize + bit-pack to int32 words (bits ∈ {1,2,4,8})."""
     if _use_pallas():
+        _count_dispatch("quantize_pack", "pallas", x.shape[-1])
         return _quantpack_kernel.quantize_pack_pallas(x, scale, bits)
+    _count_dispatch("quantize_pack", "ref", x.shape[-1])
     return _ref.quantize_pack(x, scale, bits)
 
 
 def unpack_dequant(words: jax.Array, scale: jax.Array, bits: int, n: int) -> jax.Array:
     """Fused unpack + dequantize (inverse of quantize_pack)."""
     if _use_pallas():
+        _count_dispatch("unpack_dequant", "pallas", n)
         return _quantpack_kernel.unpack_dequant_pallas(words, scale, bits, n)
+    _count_dispatch("unpack_dequant", "ref", n)
     return _ref.unpack_dequant(words, scale, bits, n)
 
 
@@ -73,13 +99,16 @@ def encode(chunks: jax.Array, signs: jax.Array, bits: int, *,
     under REPRO_FORCE_PALLAS=1, like `fwht`)."""
     if _use_pallas():
         if chunks.shape[-1] <= _quantencode_kernel.MAX_VMEM_N:
+            _count_dispatch("encode", "pallas", chunks.shape[-1])
             return _quantencode_kernel.encode_pallas(
                 chunks, signs, bits, dither=dither, mask=mask)
         if _forced():
+            _count_forced_error("encode", chunks.shape[-1])
             raise ValueError(
                 f"REPRO_FORCE_PALLAS=1 but encode N={chunks.shape[-1]} "
                 f"exceeds the single-tile VMEM budget "
                 f"{_quantencode_kernel.MAX_VMEM_N}")
+    _count_dispatch("encode", "ref", chunks.shape[-1])
     return _ref.encode(chunks, signs, bits, dither=dither, mask=mask)
 
 
@@ -96,13 +125,16 @@ def encode_ef(chunks: jax.Array, signs: jax.Array, bits: int, *,
     rdt = jnp.float32 if residual_dtype is None else residual_dtype
     if _use_pallas():
         if chunks.shape[-1] <= _quantencode_kernel.MAX_VMEM_N:
+            _count_dispatch("encode_ef", "pallas", chunks.shape[-1])
             return _quantencode_kernel.encode_ef_pallas(
                 chunks, signs, bits, dither=dither, mask=mask,
                 rescale=rescale, residual_dtype=rdt)
         if _forced():
+            _count_forced_error("encode_ef", chunks.shape[-1])
             raise ValueError(
                 f"REPRO_FORCE_PALLAS=1 but encode N={chunks.shape[-1]} "
                 f"exceeds the single-tile VMEM budget "
                 f"{_quantencode_kernel.MAX_VMEM_N}")
+    _count_dispatch("encode_ef", "ref", chunks.shape[-1])
     return _ref.encode_ef(chunks, signs, bits, dither=dither, mask=mask,
                           rescale=rescale, residual_dtype=rdt)

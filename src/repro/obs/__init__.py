@@ -1,0 +1,39 @@
+"""repro.obs — zero-overhead-when-disabled telemetry for the whole stack.
+
+Spans (context manager + decorator on monotonic `perf_counter`), typed
+counters/gauges/histograms, a JSONL event sink + an in-memory sink, a
+Chrome/Perfetto trace exporter (open `trace.json` in ui.perfetto.dev),
+an optional `jax.profiler.trace` passthrough, and a recompile tracker
+that attributes compilation-cache growth to named jitted programs.
+
+    from repro import obs
+
+    session = obs.enable(jsonl="events.jsonl", trace="trace.json")
+    with obs.span("fed.round", round=0):
+        obs.counter("fed.wire_bytes", 1234)
+    obs.disable()                       # flushes JSONL, writes trace.json
+    print(obs.report.render(session.summary()))
+
+Disabled (the default), every instrumentation call is a global load + an
+early return, and the instrumented layers (`repro.fed.rounds`,
+`repro.dist.step`, `repro.kernels.ops`, `repro.serve.scheduler`) are
+regression-tested bit-exact and recompile-free against their
+uninstrumented behavior: everything here observes from the host side,
+outside compiled code. The package imports without jax; the profiler
+passthrough degrades to a recorded no-op when `jax.profiler` tracing is
+unavailable (CPU CI).
+"""
+from repro.obs import recompile, report, sinks, trace
+from repro.obs.core import (NOOP_SPAN, Obs, Span, counter, disable, enable,
+                            enabled, gauge, get, histogram, reset, span,
+                            suspended, traced, use)
+from repro.obs.sinks import JsonlSink, MemorySink, load_jsonl
+from repro.obs.trace import ChromeTraceSink, build_trace, validate_trace
+
+__all__ = [
+    "ChromeTraceSink", "JsonlSink", "MemorySink", "NOOP_SPAN", "Obs",
+    "Span", "build_trace", "counter", "disable", "enable", "enabled",
+    "gauge", "get", "histogram", "load_jsonl", "recompile", "report",
+    "reset", "sinks", "span", "suspended", "trace", "traced", "use",
+    "validate_trace",
+]

@@ -1,0 +1,309 @@
+"""Spans, counters, gauges, histograms — zero overhead when disabled.
+
+The module-level API (`span`, `counter`, `gauge`, `histogram`, `traced`)
+reads one global: the currently active `Obs` session. Disabled (the
+default) every call is a global load + an early return — `span` hands back
+a shared no-op context manager, the metric calls return before touching
+their arguments — so instrumentation can live permanently on the host-side
+hot paths. None of it ever runs inside jit-compiled code: spans time the
+host's view of a dispatch (`time.perf_counter`), which includes device
+work only insofar as the call blocks; pair with the `jax.profiler`
+passthrough (`enable(jax_trace_dir=...)`) for device timelines.
+
+The hard contract the fed/dist regression tests pin: enabling obs changes
+no numerics (params/EF/ledger/history bit-exact with disabled) and causes
+no extra compiles (`recompile.counts()` deltas identical) — everything
+here is observe-only, on the host, outside compiled code.
+
+Sessions nest as a stack: `enable()` pushes a new session (innermost
+wins), `disable()` pops and closes it (flushing JSONL, writing
+trace.json); `use(obs)` activates an existing session for a scope without
+owning its lifetime; `suspended()` blanks the stack for a scope — how the
+overhead benchmark keeps its disabled arm clean inside an obs-enabled
+benchmark runner.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import os
+import threading
+import time
+from typing import Optional
+
+from repro.obs import recompile
+from repro.obs import report as report_lib
+from repro.obs import sinks as sinks_lib
+from repro.obs import trace as trace_lib
+
+_STACK: list["Obs"] = []          # innermost active session last
+_ACTIVE: Optional["Obs"] = None   # == _STACK[-1] (None: disabled)
+
+
+class _NoopSpan:
+    """The shared disabled-path span: enter/exit do nothing."""
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+NOOP_SPAN = _NoopSpan()
+
+
+class Span:
+    """A wall-clock span; emits one event on exit. Use via `obs.span(...)`."""
+    __slots__ = ("_obs", "name", "attrs", "_t0")
+
+    def __init__(self, obs: "Obs", name: str, attrs: dict):
+        self._obs = obs
+        self.name = name
+        self.attrs = attrs
+
+    def __enter__(self):
+        tls = self._obs._tls
+        tls.depth = getattr(tls, "depth", 0) + 1
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        t1 = time.perf_counter()
+        o = self._obs
+        depth = o._tls.depth
+        o._tls.depth = depth - 1
+        o.emit({"type": "span", "name": self.name,
+                "ts": self._t0 - o._epoch, "dur": t1 - self._t0,
+                "pid": o._pid, "tid": threading.get_ident() & 0x7FFFFFFF,
+                "depth": depth, "attrs": self.attrs})
+        return False
+
+
+class Obs:
+    """One telemetry session: an event clock, a sink list, and a recompile
+    baseline. Construct directly for tests, or via `enable()`."""
+
+    def __init__(self, sinks=(), jax_trace_dir: Optional[str] = None):
+        self.sinks = list(sinks)
+        self._epoch = time.perf_counter()
+        self._pid = os.getpid()
+        self._tls = threading.local()
+        self._pinned: list = []       # programs registered while active
+        self._baseline = recompile.counts()
+        self._summary: Optional[dict] = None
+        self.closed = False
+        self.jax_trace_active = False
+        self.jax_trace_error: Optional[str] = None
+        if jax_trace_dir is not None:
+            ok, why = trace_lib.start_jax_trace(jax_trace_dir)
+            self.jax_trace_active = ok
+            self.jax_trace_error = why
+        recompile.add_callback(self._on_register)
+
+    # -- recompile pinning ---------------------------------------------------
+    def _on_register(self, name: str, fn) -> None:
+        # keep programs registered during this session alive until the
+        # summary reads their final cache size (a benchmark's Federation may
+        # be garbage before the summary is built)
+        self._pinned.append(fn)
+
+    # -- emission ------------------------------------------------------------
+    def now(self) -> float:
+        return time.perf_counter() - self._epoch
+
+    def emit(self, event: dict) -> None:
+        for s in self.sinks:
+            s.emit(event)
+
+    def span(self, name: str, **attrs) -> Span:
+        return Span(self, name, attrs)
+
+    def _metric(self, etype: str, name: str, value, attrs: dict) -> None:
+        self.emit({"type": etype, "name": name, "ts": self.now(),
+                   "value": float(value), "pid": self._pid,
+                   "tid": threading.get_ident() & 0x7FFFFFFF,
+                   "attrs": attrs})
+
+    def counter(self, name: str, value=1, **attrs) -> None:
+        self._metric("counter", name, value, attrs)
+
+    def gauge(self, name: str, value, **attrs) -> None:
+        self._metric("gauge", name, value, attrs)
+
+    def histogram(self, name: str, value, **attrs) -> None:
+        self._metric("hist", name, value, attrs)
+
+    def meta(self, name: str, **data) -> None:
+        self.emit({"type": "meta", "name": name, "ts": self.now(),
+                   "pid": self._pid, "tid": 0, "data": data})
+
+    # -- readback ------------------------------------------------------------
+    def memory_events(self) -> list:
+        for s in self.sinks:
+            if isinstance(s, sinks_lib.MemorySink):
+                return s.events
+        return []
+
+    def recompiles(self) -> dict:
+        """Per-program compiles since this session was enabled."""
+        return recompile.delta(self._baseline, recompile.counts())
+
+    def summary(self) -> dict:
+        """Aggregate view (spans/metrics from the memory sink, recompile
+        deltas, jax-trace status). Cached at close time."""
+        if self._summary is not None:
+            return self._summary
+        s = report_lib.summarize(self.memory_events(),
+                                 recompiles=self.recompiles())
+        s["jax_trace"] = {"active": self.jax_trace_active,
+                          "error": self.jax_trace_error}
+        if self.closed:
+            self._summary = s
+        return s
+
+    def close(self) -> dict:
+        """Stop the jax trace, freeze the summary, flush/close every sink,
+        release pinned programs. Idempotent; returns the summary."""
+        if self.closed:
+            return self.summary()
+        if self.jax_trace_active:
+            trace_lib.stop_jax_trace()
+            self.jax_trace_active = False
+        recompile.remove_callback(self._on_register)
+        self.closed = True
+        s = self.summary()          # caches (pins still alive here)
+        self.meta("obs.summary", **{"spans": len(s["spans"]),
+                                    "events": s["events"]})
+        for sink in self.sinks:
+            sink.close()
+        self._pinned.clear()
+        return s
+
+
+# ---------------------------------------------------------------------------
+# The module-global session stack
+# ---------------------------------------------------------------------------
+def enabled() -> bool:
+    return _ACTIVE is not None
+
+
+def get() -> Optional[Obs]:
+    """The innermost active session, or None when disabled."""
+    return _ACTIVE
+
+
+def _set_active(obs: Optional[Obs]) -> None:
+    global _ACTIVE
+    _ACTIVE = obs
+
+
+def enable(*, memory: bool = True, jsonl: Optional[str] = None,
+           trace: Optional[str] = None,
+           jax_trace_dir: Optional[str] = None, sinks=()) -> Obs:
+    """Activate a new session. `memory=True` keeps events in-process for
+    `summary()`; `jsonl=`/`trace=` add file sinks (the trace file is
+    written at `disable()`); `jax_trace_dir=` starts the optional
+    `jax.profiler` passthrough (no-op with a recorded reason when the
+    profiler is unavailable). Returns the session (keep it: `summary()`
+    stays readable after `disable()`)."""
+    built = list(sinks)
+    if memory:
+        built.append(sinks_lib.MemorySink())
+    if jsonl is not None:
+        built.append(sinks_lib.JsonlSink(jsonl))
+    if trace is not None:
+        built.append(trace_lib.ChromeTraceSink(trace))
+    obs = Obs(built, jax_trace_dir=jax_trace_dir)
+    _STACK.append(obs)
+    _set_active(obs)
+    return obs
+
+
+def disable() -> Optional[Obs]:
+    """Close and pop the innermost session; returns it (summary intact)."""
+    if not _STACK:
+        return None
+    obs = _STACK.pop()
+    _set_active(_STACK[-1] if _STACK else None)
+    obs.close()
+    return obs
+
+
+@contextlib.contextmanager
+def use(obs: Obs):
+    """Activate an existing session for a scope (does NOT close it)."""
+    _STACK.append(obs)
+    _set_active(obs)
+    try:
+        yield obs
+    finally:
+        if _STACK and _STACK[-1] is obs:
+            _STACK.pop()
+        elif obs in _STACK:          # exception unwound past inner enables
+            _STACK.remove(obs)
+        _set_active(_STACK[-1] if _STACK else None)
+
+
+@contextlib.contextmanager
+def suspended():
+    """Disable observability for a scope without closing any session."""
+    global _STACK
+    saved, _STACK = _STACK, []
+    _set_active(None)
+    try:
+        yield
+    finally:
+        _STACK = saved
+        _set_active(_STACK[-1] if _STACK else None)
+
+
+def reset() -> None:
+    """Close every active session (test teardown hygiene)."""
+    while _STACK:
+        disable()
+
+
+# -- the disabled-fast-path module API --------------------------------------
+def span(name: str, **attrs):
+    o = _ACTIVE
+    if o is None:
+        return NOOP_SPAN
+    return o.span(name, **attrs)
+
+
+def counter(name: str, value=1, **attrs) -> None:
+    o = _ACTIVE
+    if o is not None:
+        o._metric("counter", name, value, attrs)
+
+
+def gauge(name: str, value, **attrs) -> None:
+    o = _ACTIVE
+    if o is not None:
+        o._metric("gauge", name, value, attrs)
+
+
+def histogram(name: str, value, **attrs) -> None:
+    o = _ACTIVE
+    if o is not None:
+        o._metric("hist", name, value, attrs)
+
+
+def traced(name: Optional[str] = None, **attrs):
+    """Decorator form of `span`: times every call of the wrapped function
+    under `name` (default: its qualname). Disabled sessions cost one global
+    load per call."""
+    def deco(fn):
+        label = name or fn.__qualname__
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            o = _ACTIVE
+            if o is None:
+                return fn(*args, **kwargs)
+            with o.span(label, **attrs):
+                return fn(*args, **kwargs)
+        return wrapper
+    return deco

@@ -1,0 +1,107 @@
+"""Aggregate obs events into a per-run summary (dict + rendered table).
+
+`summarize` folds a flat event list (from a MemorySink or a JSONL file)
+into per-name statistics; `render` formats the result as the text table
+`benchmarks/run.py` prints per benchmark. The dict is JSON-able as-is —
+it is what lands under each benchmark's `"obs"` key in `BENCH_*.json`.
+"""
+from __future__ import annotations
+
+
+def _percentile(sorted_vals: list, q: float) -> float:
+    """Nearest-rank percentile of an already-sorted list."""
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, max(0, round(q * (len(sorted_vals) - 1))))
+    return sorted_vals[idx]
+
+
+def summarize(events, recompiles=None) -> dict:
+    """Fold events into {"spans", "counters", "gauges", "hists",
+    "recompiles", "events"}.
+
+    spans:    per name — count, total_s, mean_s, max_s
+    counters: per name — total (sum of values), count
+    gauges:   per name — last, min, max
+    hists:    per name — count, mean, p50, p95, min, max
+    """
+    spans: dict = {}
+    counters: dict = {}
+    gauges: dict = {}
+    hists: dict = {}
+    for e in events:
+        etype, name = e.get("type"), e.get("name")
+        if etype == "span":
+            s = spans.setdefault(name, {"count": 0, "total_s": 0.0,
+                                        "max_s": 0.0})
+            dur = float(e.get("dur", 0.0))
+            s["count"] += 1
+            s["total_s"] += dur
+            s["max_s"] = max(s["max_s"], dur)
+        elif etype == "counter":
+            c = counters.setdefault(name, {"total": 0.0, "count": 0})
+            c["total"] += float(e.get("value", 0.0))
+            c["count"] += 1
+        elif etype == "gauge":
+            v = float(e.get("value", 0.0))
+            g = gauges.setdefault(name, {"last": v, "min": v, "max": v})
+            g["last"] = v
+            g["min"] = min(g["min"], v)
+            g["max"] = max(g["max"], v)
+        elif etype == "hist":
+            hists.setdefault(name, []).append(float(e.get("value", 0.0)))
+    for s in spans.values():
+        s["mean_s"] = s["total_s"] / s["count"] if s["count"] else 0.0
+    hstats = {}
+    for name, vals in hists.items():
+        vals.sort()
+        hstats[name] = {"count": len(vals),
+                        "mean": sum(vals) / len(vals),
+                        "p50": _percentile(vals, 0.50),
+                        "p95": _percentile(vals, 0.95),
+                        "min": vals[0], "max": vals[-1]}
+    return {"events": len(events), "spans": spans, "counters": counters,
+            "gauges": gauges, "hists": hstats,
+            "recompiles": dict(recompiles or {})}
+
+
+def render(summary: dict, title: str = "obs summary") -> str:
+    """Human-readable table of a `summarize` result."""
+    lines = [f"== {title} ({summary.get('events', 0)} events) =="]
+    spans = summary.get("spans", {})
+    if spans:
+        lines.append(f"  {'span':<28} {'count':>7} {'total ms':>10} "
+                     f"{'mean ms':>10} {'max ms':>10}")
+        for name in sorted(spans):
+            s = spans[name]
+            lines.append(f"  {name:<28} {s['count']:>7} "
+                         f"{s['total_s'] * 1e3:>10.2f} "
+                         f"{s['mean_s'] * 1e3:>10.3f} "
+                         f"{s['max_s'] * 1e3:>10.2f}")
+    counters = summary.get("counters", {})
+    if counters:
+        lines.append(f"  {'counter':<38} {'total':>14} {'events':>8}")
+        for name in sorted(counters):
+            c = counters[name]
+            lines.append(f"  {name:<38} {c['total']:>14g} {c['count']:>8}")
+    gauges = summary.get("gauges", {})
+    if gauges:
+        lines.append(f"  {'gauge':<38} {'last':>10} {'min':>10} {'max':>10}")
+        for name in sorted(gauges):
+            g = gauges[name]
+            lines.append(f"  {name:<38} {g['last']:>10g} {g['min']:>10g} "
+                         f"{g['max']:>10g}")
+    hists = summary.get("hists", {})
+    if hists:
+        lines.append(f"  {'histogram':<30} {'count':>7} {'mean':>10} "
+                     f"{'p50':>10} {'p95':>10}")
+        for name in sorted(hists):
+            h = hists[name]
+            lines.append(f"  {name:<30} {h['count']:>7} {h['mean']:>10.4g} "
+                         f"{h['p50']:>10.4g} {h['p95']:>10.4g}")
+    recompiles = summary.get("recompiles", {})
+    if recompiles:
+        lines.append(f"  {'program (compiles this session)':<44} {'n':>5}")
+        for name in sorted(recompiles):
+            lines.append(f"  {name:<44} {recompiles[name]:>5}")
+    return "\n".join(lines)

@@ -1,0 +1,64 @@
+"""Event sinks: in-memory (tests / summaries) and JSONL (artifacts).
+
+Every sink consumes the flat event dicts `repro.obs.core` emits:
+
+  {"type": "span",    "name": ..., "ts": t0, "dur": s, "pid", "tid",
+   "depth", "attrs": {...}}
+  {"type": "counter" | "gauge" | "hist", "name": ..., "ts": ...,
+   "value": v, "pid", "tid", "attrs": {...}}
+  {"type": "meta",    "name": ..., "ts": ..., "data": {...}}
+
+`ts` is seconds since the owning Obs session's epoch (a `perf_counter`
+origin captured at enable time); durations are seconds. The Chrome-trace
+sink lives in `repro.obs.trace` (it rescales to microseconds).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+
+class MemorySink:
+    """Keeps every event in a list — the sink tests and `Obs.summary()`
+    read back."""
+
+    def __init__(self):
+        self.events: list[dict] = []
+
+    def emit(self, event: dict) -> None:
+        self.events.append(event)
+
+    def close(self) -> None:
+        pass
+
+
+class JsonlSink:
+    """One JSON object per line, append-on-emit. The file handle stays open
+    (and buffered) for the session; `close()` flushes it."""
+
+    def __init__(self, path: str):
+        self.path = path
+        parent = os.path.dirname(path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        self._f = open(path, "w")
+
+    def emit(self, event: dict) -> None:
+        self._f.write(json.dumps(event, separators=(",", ":"),
+                                 default=str) + "\n")
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.flush()
+            self._f.close()
+
+
+def load_jsonl(path: str) -> list[dict]:
+    """Read a JSONL event file back into a list of event dicts."""
+    events = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                events.append(json.loads(line))
+    return events

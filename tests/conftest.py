@@ -30,6 +30,16 @@ jax.config.update("jax_enable_x64", False)
 import pytest  # noqa: E402
 
 from repro.launch.mesh import make_host_mesh  # noqa: E402
+from repro.obs import core as _obs_core  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _obs_isolation():
+    """No obs session may leak between tests: the module-level stack is
+    process-global, so a test that enables without disabling would silently
+    instrument (and slow) every test after it."""
+    yield
+    _obs_core.reset()
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,108 @@
+"""Federation.run history: documented keys, byte accounting, resume indices.
+
+The history dict is the interface the benchmarks and the paper figures
+read; these tests pin its documented shape (run()'s docstring: round, loss,
+wire_bytes, analytic_bytes, cum_bytes, participants, stragglers, realloc,
+rates) and the cumulative-bytes invariant the communication-budget plots
+depend on.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_federation, save_federation
+from repro.fed import (ClientConfig, FedConfig, Federation, ServerConfig,
+                       registry)
+
+DOCUMENTED_KEYS = {"round", "loss", "wire_bytes", "analytic_bytes",
+                   "cum_bytes", "participants", "stragglers", "realloc",
+                   "rates"}
+
+
+def _problem(m=4, dim=32, n=24, seed=6):
+    ka, kx = jax.random.split(jax.random.key(seed))
+    a = jax.random.normal(ka, (m, n, dim)) / jnp.sqrt(n)
+    x_true = jax.random.normal(kx, (dim,))
+    shards = [{"a": a[i], "b": a[i] @ x_true} for i in range(m)]
+
+    def loss_fn(p, batch):
+        r = batch["a"] @ p["x"] - batch["b"]
+        return 0.5 * jnp.mean(r * r)
+
+    return shards, loss_fn, {"x": jnp.zeros(dim)}
+
+
+def _build(loss_fn, params, shards):
+    return Federation(loss_fn, params, shards,
+                      registry.make("ndsc", 4.0, chunk=32),
+                      ClientConfig(local_steps=2, lr=0.25),
+                      ServerConfig(aggregator="fedavg"), seed=8)
+
+
+def test_history_documented_keys_and_lengths():
+    shards, loss_fn, params = _problem()
+    fed = _build(loss_fn, params, shards)
+    rounds = 5
+    hist = fed.run(FedConfig(num_rounds=rounds, participation=0.8,
+                             dropout=0.2, seed=2),
+                   eval_fn=lambda p: loss_fn(p, {
+                       "a": jnp.concatenate([s["a"] for s in shards]),
+                       "b": jnp.concatenate([s["b"] for s in shards])}))
+    assert set(hist) == DOCUMENTED_KEYS
+    for key in DOCUMENTED_KEYS:
+        assert len(hist[key]) == rounds, key       # incl. loss with eval_fn
+    assert hist["round"] == list(range(rounds))
+    for t in range(rounds):
+        assert set(hist["participants"][t]).isdisjoint(
+            hist["stragglers"][t])
+        assert hist["wire_bytes"][t] >= 0.0
+        assert hist["analytic_bytes"][t] >= 0.0
+
+
+def test_history_loss_empty_without_eval_fn():
+    shards, loss_fn, params = _problem()
+    hist = _build(loss_fn, params, shards).run(FedConfig(num_rounds=2))
+    assert hist["loss"] == []
+    assert len(hist["round"]) == 2
+
+
+def test_cum_bytes_is_monotone_running_sum():
+    shards, loss_fn, params = _problem()
+    fed = _build(loss_fn, params, shards)
+    hist = fed.run(FedConfig(num_rounds=6, participation=0.7, dropout=0.3,
+                             seed=13))
+    running = np.cumsum(hist["wire_bytes"])
+    np.testing.assert_array_equal(np.asarray(hist["cum_bytes"]), running)
+    assert all(b1 >= b0 for b0, b1 in zip(hist["cum_bytes"],
+                                          hist["cum_bytes"][1:]))
+
+
+def test_round_indices_continue_across_checkpoint_restore(tmp_path):
+    """Resume must pick up at the saved round counter: the restored run's
+    history rounds continue where the first run stopped, and match the
+    tail of an uninterrupted run exactly."""
+    shards, loss_fn, params = _problem()
+    cfg = FedConfig(num_rounds=3, participation=0.9, dropout=0.1, seed=4)
+
+    ref = _build(loss_fn, params, shards)
+    h_full = ref.run(FedConfig(num_rounds=6, participation=0.9, dropout=0.1,
+                               seed=4))
+
+    first = _build(loss_fn, params, shards)
+    h_first = first.run(cfg)
+    save_federation(str(tmp_path), first)
+
+    resumed = _build(loss_fn, params, shards)
+    restore_federation(str(tmp_path), resumed)
+    assert resumed.rounds_done == 3
+    h_resumed = resumed.run(cfg)
+
+    assert h_first["round"] == [0, 1, 2]
+    assert h_resumed["round"] == [3, 4, 5]
+    stitched = {k: h_first[k] + h_resumed[k] for k in h_full}
+    # cum_bytes restarts per run() call; everything else stitches exactly
+    assert {k: v for k, v in stitched.items() if k != "cum_bytes"} == \
+        {k: v for k, v in h_full.items() if k != "cum_bytes"}
+    np.testing.assert_allclose(
+        np.asarray(h_resumed["cum_bytes"]) + h_first["cum_bytes"][-1],
+        np.asarray(h_full["cum_bytes"][3:]))
