@@ -48,6 +48,7 @@ ALL = {
     "fed_cohort": "fed_cohort_scaling",
     "fed_mesh": "fed_mesh_scaling",
     "codec_roofline": "codec_roofline",
+    "serve_load": "serve_load",
     "table1": "table1_compressors",
     "fig1a": "fig1a_compression_error",
     "fig1b": "fig1b_dgddef_rate",
@@ -73,6 +74,10 @@ TINY = {
                      chunk=32),
     "codec_roofline": dict(n_values=(128, 512), bits_values=(1, 4),
                            rows=16, reps=1),
+    "serve_load": dict(slots=2, max_seq=64, prefix_len=24, n_requests=16,
+                       base_rate=10.0, burst_rate=40.0, burst_period_s=1.0,
+                       burst_len_s=0.3, prompt_len=(3, 6),
+                       max_new_tokens=(3, 6)),
     "table1": dict(n=256, trials=5),
     "fig1c": dict(dims=(128, 256, 512)),
     "obs_overhead": dict(m=8, dim=48, per_client=16, rounds=30,

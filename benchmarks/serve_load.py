@@ -1,0 +1,134 @@
+"""Serve engine under bursty open-loop load: TTFT and throughput.
+
+Drives `repro.serve.Engine` with the piecewise-Poisson load generator and
+reports p50/p99 time-to-first-token and tokens/s/device over the grid
+
+    {quantized NDSC KV cache, unquantized f32 cache}
+  × {prefix-hit admission, cold admission}
+
+where every request covers the same tokens (hits carry `prefix_id` plus a
+short suffix; cold requests carry the full prefix+suffix prompt), so the
+TTFT gap between the classes is pure prefill amortization and the gap
+between the cache configs is the bits/32 HBM story at serve time.
+
+GATE — the benchmark REFUSES to report numbers unless the prefix-cache
+bit-exactness contract holds first, for both cache configs: a prefix-hit
+admission's cached K/V words (packed int32 + scales when quantized),
+positions, and all subsequent greedy tokens must be bitwise identical to a
+cold admission that prefills the same prefix on the spot
+(`repro.serve.verify_prefix_contract`).
+
+Each config gets an untimed warmup pass over a clone of the trace (the
+engine's jitted programs are shared per (config, max_seq) process-wide), so
+the timed pass measures steady-state serving, not XLA compiles.
+
+  PYTHONPATH=src python -m benchmarks.serve_load
+  PYTHONPATH=src python -m benchmarks.run serve_load --tiny
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import model as model_lib
+from repro.serve import (Engine, LoadConfig, ServeConfig, generate, play,
+                         verify_prefix_contract)
+
+
+def _percentiles(vals: list) -> dict:
+    if not vals:
+        return {"p50_ms": None, "p99_ms": None, "n": 0}
+    arr = np.asarray(vals) * 1e3
+    return {"p50_ms": round(float(np.percentile(arr, 50)), 3),
+            "p99_ms": round(float(np.percentile(arr, 99)), 3),
+            "n": len(vals)}
+
+
+def _run_config(cfg, params, serve_cfg: ServeConfig, load_cfg: LoadConfig,
+                prefix_tokens: np.ndarray) -> dict:
+    def fresh_trace():
+        # generation is deterministic in the seed: warmup and timed pass
+        # replay the identical trace on fresh Request objects
+        return generate(load_cfg, cfg.vocab_size, prefix_id="system",
+                        prefix_tokens=prefix_tokens)
+
+    def fresh_engine():
+        eng = Engine(cfg, params, serve_cfg)
+        eng.register_prefix("system", prefix_tokens, prefill=True)
+        return eng
+
+    # untimed warmup: same trace shape -> same jitted specializations
+    play(fresh_engine(), fresh_trace())
+    out = play(fresh_engine(), fresh_trace())
+
+    finished = out["finished"]
+    ttft = {"prefix_hit": [], "cold": []}
+    for r in finished:
+        kind = "prefix_hit" if r.admission == "prefix_hit" else "cold"
+        ttft[kind].append(r.ttft_s)
+    total_tokens = sum(len(r.tokens_out) for r in finished)
+    tok_per_s = total_tokens / out["wall_s"]
+    return {
+        "requests": len(finished),
+        "decode_steps": out["steps"],
+        "wall_s": round(out["wall_s"], 3),
+        "tokens": total_tokens,
+        "tokens_per_s_per_device": round(tok_per_s / jax.device_count(), 1),
+        "ttft": {k: _percentiles(v) for k, v in ttft.items()},
+    }
+
+
+def run(arch: str = "yi-6b", bits: int = 8, slots: int = 4,
+        max_seq: int = 128, prefix_len: int = 24, n_requests: int = 48,
+        base_rate: float = 20.0, burst_rate: float = 120.0,
+        burst_period_s: float = 2.0, burst_len_s: float = 0.5,
+        prompt_len: tuple = (4, 10), max_new_tokens: tuple = (4, 12),
+        prefix_ratio: float = 0.5, seed: int = 0) -> dict:
+    base = configs.get_reduced(arch)
+    qcfg = dataclasses.replace(base, kv_quant_bits=bits)
+    params = model_lib.init_params(jax.random.key(0), base)
+    rng = np.random.default_rng(seed)
+    prefix_tokens = rng.integers(0, base.vocab_size, prefix_len,
+                                 dtype=np.int32)
+    contract_prompt = rng.integers(0, base.vocab_size, 6, dtype=np.int32)
+    serve_cfg = ServeConfig(slots=slots, max_seq=max_seq)
+    load_cfg = LoadConfig(n_requests=n_requests, base_rate=base_rate,
+                          burst_rate=burst_rate,
+                          burst_period_s=burst_period_s,
+                          burst_len_s=burst_len_s, prompt_len=prompt_len,
+                          max_new_tokens=max_new_tokens,
+                          prefix_ratio=prefix_ratio, seed=seed)
+
+    results: dict = {"arch": arch, "bits": bits, "slots": slots,
+                     "devices": jax.device_count(), "contract": {}}
+    for label, cfg in (("quantized", qcfg), ("unquantized", base)):
+        # the gate: no contract, no numbers
+        try:
+            evidence = verify_prefix_contract(
+                cfg, params, serve_cfg, prefix_tokens, contract_prompt)
+        except AssertionError as exc:
+            raise RuntimeError(
+                f"prefix-cache contract FAILED for the {label} config — "
+                f"refusing to report load numbers: {exc}") from exc
+        results["contract"][label] = {"bitexact": True, **evidence}
+
+    for label, cfg in (("quantized", qcfg), ("unquantized", base)):
+        results[label] = _run_config(cfg, params, serve_cfg, load_cfg,
+                                     prefix_tokens)
+
+    q, u = results["quantized"], results["unquantized"]
+    results["headline"] = {
+        "quant_tokens_per_s_per_device": q["tokens_per_s_per_device"],
+        "unquant_tokens_per_s_per_device": u["tokens_per_s_per_device"],
+        "quant_hit_p50_ms": q["ttft"]["prefix_hit"]["p50_ms"],
+        "quant_cold_p50_ms": q["ttft"]["cold"]["p50_ms"],
+    }
+    return results
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=2))

@@ -128,8 +128,45 @@ def codec_spec(name: str, budget, kwargs: dict) -> tuple:
     return (name, budget_key, tuple(sorted(items.items())))
 
 
-def make(name: str, budget: float = 4.0, **kwargs) -> TreeCodec:
-    """Instantiate a registered compressor at a bits-per-dimension budget."""
+_UNSET = object()
+
+
+def make(name, budget=_UNSET, **kwargs) -> TreeCodec:
+    """Instantiate a registered compressor at a bits-per-dimension budget.
+
+    Two call forms:
+
+      make("ndsc", 1.5, chunk=64)        # name + budget + kwargs
+      make(spec)                         # the canonical spec tuple
+
+    where `spec` is the hashable identity produced by `codec_spec(...)` (and
+    carried on every codec as `TreeCodec.spec`):
+
+      (name, budget, kwargs_items)
+        name          registered factory name, e.g. "ndsc"
+        budget        float bits/dim, or a tuple of per-leaf floats
+        kwargs_items  sorted ((key, value), ...) of the factory kwargs,
+                      canonicalized against the factory signature
+
+    The forms round-trip by spec equality — `make(c.spec).spec == c.spec`
+    for every codec `c` — so checkpoints, benchmarks and cohort keys can
+    rebuild a codec from its spec alone, without re-plumbing the original
+    kwargs. The spec form takes no extra arguments (they are already baked
+    into the tuple)."""
+    if isinstance(name, (tuple, list)):
+        if budget is not _UNSET or kwargs:
+            raise ValueError("make(spec) takes no extra arguments: the "
+                             "budget and kwargs are part of the spec")
+        try:
+            name, budget, items = name
+            kwargs = dict(items)
+        except (TypeError, ValueError):
+            raise ValueError(f"malformed codec spec {name!r}; expected "
+                             "(name, budget, kwargs_items) from codec_spec")
+        if isinstance(budget, tuple):       # per-leaf budgets
+            budget = list(budget)
+    elif budget is _UNSET:
+        budget = 4.0
     if name not in _REGISTRY:
         raise ValueError(
             f"unknown compressor {name!r}; available: {available()}")

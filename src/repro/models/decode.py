@@ -220,6 +220,127 @@ def greedy_token(logits: jax.Array) -> jax.Array:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
 
 
+def decode_tokens(cfg: ModelConfig, params: dict, state: DecodeState,
+                  tokens: jax.Array):
+    """Feed a (B, S) block of KNOWN tokens through S decode steps.
+
+    The continuation primitive behind prefix-cache admission: restoring a
+    cached prefix state and decode_tokens-ing the prompt is, by construction,
+    the same sequence of `decode_step` applications a cold admission runs —
+    which is what makes the prefix-hit bit-exactness contract structural
+    rather than numerical. Returns (logits after the LAST token (B, V),
+    state advanced by S)."""
+    if tokens.ndim != 2 or tokens.shape[1] < 1:
+        raise ValueError(f"decode_tokens needs (B, S>=1) tokens, "
+                         f"got {tokens.shape}")
+
+    def body(st, t):
+        logits, st = decode_step(cfg, params, st, t[:, None])
+        return st, logits
+
+    state, logits_seq = jax.lax.scan(body, state, jnp.swapaxes(tokens, 0, 1))
+    return logits_seq[-1], state
+
+
+# ---------------------------------------------------------------------------
+# Slot scatter / extract: the continuous-batching and prefix-cache primitives
+# ---------------------------------------------------------------------------
+# Cache leaves indexed (L, B, C, ...) by position along axis 2 — the leaves a
+# prefix-cache entry trims to its own length. Everything else with a batch
+# axis (recurrent states, pos) is per-slot but position-free; "signs" is the
+# per-layer rotation shared by every slot.
+POSITIONAL_CACHE_KEYS = frozenset(
+    {"k", "v", "k_words", "k_scale", "v_words", "v_scale"})
+SHARED_CACHE_KEYS = frozenset({"signs"})
+
+
+def scatter_slot(batched: DecodeState, single: DecodeState,
+                 slot: int) -> DecodeState:
+    """Write the batch-1 `single` into slot `slot` of `batched`.
+
+    Positional leaves of `single` may be trimmed to a prefix length C' <= C
+    (see `extract_slot`); the slot's remaining C - C' positions are zeroed,
+    so the result is bitwise the state a fresh batch-1 prefill of the same
+    tokens would produce — the prefix-cache bit-exactness contract."""
+    caches = {}
+    for name, b in batched.caches.items():
+        s = single.caches[name]
+        if name in SHARED_CACHE_KEYS:
+            caches[name] = b
+        elif name in POSITIONAL_CACHE_KEYS:
+            col = jnp.zeros(b.shape[:1] + b.shape[2:], b.dtype)  # (L, C, ...)
+            col = col.at[:, :s.shape[2]].set(s[:, 0])
+            caches[name] = b.at[:, slot].set(col)
+        else:                                   # per-slot, position-free
+            caches[name] = b.at[:, slot].set(s[:, 0])
+    return DecodeState(caches=caches,
+                       pos=batched.pos.at[slot].set(single.pos[0]))
+
+
+def extract_slot(state: DecodeState, slot: int, *,
+                 trim: bool = True) -> DecodeState:
+    """Gather slot `slot` of a batched state into a batch-1 state.
+
+    With `trim` (the default) positional cache leaves keep only their
+    occupied columns — min(pos, C) of them; ring caches past their window
+    keep all C. `scatter_slot(init, extract_slot(st, i), j)` reproduces
+    slot i of `st` bitwise in slot j (zeros elsewhere), which is the
+    round-trip the prefix cache and the property tests rely on."""
+    length = int(state.pos[slot])
+    caches = {}
+    for name, x in state.caches.items():
+        if name in SHARED_CACHE_KEYS:
+            caches[name] = x
+        elif name in POSITIONAL_CACHE_KEYS:
+            col = x[:, slot:slot + 1]
+            if trim:
+                col = col[:, :, :min(length, x.shape[2])]
+            caches[name] = col
+        else:
+            caches[name] = x[:, slot:slot + 1]
+    return DecodeState(caches=caches, pos=state.pos[slot:slot + 1])
+
+
+def expand_state(cfg: ModelConfig, single: DecodeState,
+                 max_seq: int) -> DecodeState:
+    """Inverse of `extract_slot`'s trim: a (possibly trimmed) batch-1 state
+    re-seated in full-size caches for decoding up to `max_seq`."""
+    return scatter_slot(init_decode_state(cfg, 1, max_seq), single, 0)
+
+
+def prefill_into(cfg: ModelConfig, params: dict, batched: DecodeState,
+                 tokens: jax.Array, slot, max_seq: int):
+    """Cold admission as ONE program: batch-1 prefill of `tokens` (S,)
+    scattered into slot `slot` of `batched`. Returns (new batched state,
+    last-token logits (V,)). `slot` may be traced — one compiled
+    specialization serves every slot at a given prompt length."""
+    logits, single = prefill(cfg, params, tokens[None, :], max_seq)
+    return scatter_slot(batched, single, slot), logits[0]
+
+
+def extend_into(cfg: ModelConfig, params: dict, batched: DecodeState,
+                entry: DecodeState, tokens: jax.Array, slot, max_seq: int):
+    """Prefix admission as ONE program: re-seat the (trimmed) batch-1
+    `entry` in full-size caches, decode the (S,) prompt continuation, and
+    scatter the result into slot `slot` of `batched`. Returns (new batched
+    state, last-token logits (V,)). Hit and miss admissions both run this
+    on bitwise-equal entries — the prefix contract."""
+    single = expand_state(cfg, entry, max_seq)
+    logits, single = decode_tokens(cfg, params, single, tokens[None, :])
+    return scatter_slot(batched, single, slot), logits[0]
+
+
+def state_bytes(state: DecodeState) -> int:
+    """Device bytes held by the per-slot leaves of `state` (shared leaves —
+    the rotation signs — excluded): what a prefix-cache hit avoids
+    recomputing and rewriting."""
+    total = state.pos.size * state.pos.dtype.itemsize
+    for name, x in state.caches.items():
+        if name not in SHARED_CACHE_KEYS:
+            total += x.size * x.dtype.itemsize
+    return int(total)
+
+
 # ---------------------------------------------------------------------------
 # Prefill: run the training forward once, collect the caches
 # ---------------------------------------------------------------------------
@@ -241,23 +362,45 @@ def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
     positions = jnp.arange(s, dtype=jnp.int32)[None, :]
     state = init_decode_state(cfg, b, max_seq)
 
-    def body(hh, block_p):
+    if s <= c:
+        ring_slots = jnp.arange(s)                        # contiguous
+    else:  # ring: last c positions land at slots (s-c+i) % c
+        ring_slots = jnp.mod(jnp.arange(s - c, s), c)
+
+    def body(hh, xs):
+        block_p, signs = xs
         hh, _, kv = block_forward(cfg, block_p, hh, positions, collect_kv=True)
         if kv is None:
             return hh, {}
         k, v = kv
-        if s <= c:
-            kc = jnp.zeros((b, c) + k.shape[2:], dt).at[:, :s].set(k)
-            vc = jnp.zeros((b, c) + v.shape[2:], dt).at[:, :s].set(v)
-        else:  # ring: last c positions, at slots (s-c+i) % c
-            tail_k, tail_v = k[:, s - c:], v[:, s - c:]
-            slots = jnp.mod(jnp.arange(s - c, s), c)
-            kc = jnp.zeros((b, c) + k.shape[2:], dt).at[:, slots].set(tail_k)
-            vc = jnp.zeros((b, c) + v.shape[2:], dt).at[:, slots].set(tail_v)
+        if s > c:
+            k, v = k[:, s - c:], v[:, s - c:]
+        if cfg.kv_quant_bits:
+            # quantize into the packed NDSC cache with this layer's rotation
+            # signs — the same encode_entry decode_step writes per token, so
+            # the cache stays one wire format across prefill and decode
+            out = {}
+            for side, val in (("k", k), ("v", v)):
+                words, scale = kvquant.encode_entry(val, signs,
+                                                    cfg.kv_quant_bits)
+                out[f"{side}_words"] = jnp.zeros(
+                    (b, c) + words.shape[2:],
+                    jnp.int32).at[:, ring_slots].set(words)
+                out[f"{side}_scale"] = jnp.zeros(
+                    (b, c) + scale.shape[2:],
+                    jnp.float32).at[:, ring_slots].set(scale)
+            return hh, out
+        kc = jnp.zeros((b, c) + k.shape[2:], dt).at[:, ring_slots].set(k)
+        vc = jnp.zeros((b, c) + v.shape[2:], dt).at[:, ring_slots].set(v)
         return hh, {"k": kc, "v": vc}
 
     if cfg.block in ("attn_mlp", "attn_moe", "attn_moe_dense"):
-        h, kv_stack = jax.lax.scan(body, h, params["blocks"])
+        if cfg.kv_quant_bits:
+            from repro.models import kvquant
+            signs_stack = state.caches["signs"]           # (L, K, dh)
+        else:
+            signs_stack = jnp.zeros((cfg.num_scanned,), jnp.float32)
+        h, kv_stack = jax.lax.scan(body, h, (params["blocks"], signs_stack))
         caches = dict(state.caches)
         caches.update(kv_stack)
         state = DecodeState(caches=caches, pos=jnp.full((b,), s, jnp.int32))

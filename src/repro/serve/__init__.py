@@ -1,2 +1,33 @@
-"""Serving runtime: continuous-batching request scheduler."""
-from repro.serve.scheduler import BatchScheduler, Request
+"""`repro.serve` — the serving runtime's stable public surface.
+
+    from repro.serve import Engine, ServeConfig, Request
+
+    engine = Engine(model_cfg, params, ServeConfig(slots=8, max_seq=512))
+    engine.register_prefix("system", system_tokens, prefill=True)
+    engine.submit(Request(rid=0, prompt=suffix, prefix_id="system"))
+    finished = engine.run_to_completion()
+
+`BatchScheduler` (the v1 scheduler) remains importable as a deprecated
+alias of `Engine` — construction emits `DeprecationWarning`; importing this
+package does not.
+"""
+from repro.serve.engine import (Engine, EngineExhausted, Request,
+                                ServeConfig, verify_prefix_contract)
+from repro.serve.loadgen import Arrival, LoadConfig, generate, play
+from repro.serve.prefixcache import PrefixCache, PrefixEntry
+from repro.serve.scheduler import BatchScheduler
+
+__all__ = [
+    "Engine",
+    "EngineExhausted",
+    "Request",
+    "ServeConfig",
+    "verify_prefix_contract",
+    "PrefixCache",
+    "PrefixEntry",
+    "LoadConfig",
+    "Arrival",
+    "generate",
+    "play",
+    "BatchScheduler",
+]

@@ -1,173 +1,37 @@
-"""Continuous-batching scheduler: slot-level request lifecycle over decode.
+"""Deprecation shim: `BatchScheduler` moved to `repro.serve.engine.Engine`.
 
-The production decode step (repro/dist/step.make_serve_step) runs a fixed
-batch of B slots through one token per call. This scheduler keeps those
-slots saturated against a request queue:
+The v1 continuous-batching scheduler grew into the v2 engine (fixed-prefix
+cache, explicit exhaustion status, TTFT accounting); this module keeps the
+old name importable — same shim pattern as `benchmarks/roofline.py` →
+`hlo_report.py`. Constructing `BatchScheduler` emits `DeprecationWarning`;
+importing this module does not (the CI guard pins that).
 
-  * submit(Request)        — enqueue a prompt with a max_new_tokens budget,
-  * step()                 — (1) refill any free slot: prefill the next
-                             queued prompt in isolation (batch-1) and
-                             scatter its caches / position into the slot;
-                             (2) run ONE batched decode_step; (3) harvest
-                             tokens per active slot, retiring slots that hit
-                             their budget or emit `eos_id`,
-  * run_to_completion()    — steps until queue and slots drain.
+Behavior changes folded into the alias on purpose:
 
-Per-slot positions (DecodeState.pos: (B,)) are what make mid-flight refill
-sound: each slot's RoPE phase, ring-cache slot and validity mask depend only
-on its own counter. Works with every decode-capable block family, including
-the recurrent states (their per-slot rows are scattered the same way) and
-the NDSC-quantized cache.
-
-Observability: with a `repro.obs` session active, every `step()` reports
-queue depth and batch occupancy gauges, spans around the prefill and the
-batched decode dispatch, a per-step harvested-token counter, and — per
-retired request — a wall-clock latency histogram (submit → done) plus a
-`serve.requests` counter tagged with the retirement reason. Disabled, the
-scheduler pays one global load per step; generated tokens are identical
-either way.
+  * `run_to_completion` now RAISES `EngineExhausted` when `max_steps` runs
+    out with requests still queued/active — the v1 scheduler silently
+    returned partial results, which was a bug, not a contract.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
+import warnings
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
-
-from repro.models import decode as decode_lib
-from repro.obs import core as obs_lib
-from repro.obs import recompile as recompile_lib
+from repro.models.decode import scatter_slot as _scatter_slot  # noqa: F401
+#    (re-export: the slot-scatter helper was private here in v1; it is now
+#     public API in repro.models.decode, with cache-extract as its inverse)
+from repro.serve.engine import Engine, Request, ServeConfig  # noqa: F401
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: jax.Array            # (S,) int32
-    max_new_tokens: int = 32
-    tokens_out: list = dataclasses.field(default_factory=list)
-    done: bool = False
-    # obs bookkeeping (perf_counter stamps; None while obs is disabled)
-    submit_time: Optional[float] = None
-    finish_time: Optional[float] = None
+class BatchScheduler(Engine):
+    """Deprecated v1 constructor signature over the v2 `Engine`."""
 
-
-def _scatter_slot(batched, single, slot: int):
-    """Write the batch-1 pytree `single` into slot `slot` of `batched`.
-
-    Cache leaves are (L, B, ...); pos is (B,). Leaves that don't carry a
-    batch axis in that position (e.g. the per-layer rotation signs, which
-    are identical across slots) are left as-is.
-    """
-
-    def put(b, s):
-        if b.ndim >= 2 and s.ndim == b.ndim and s.shape[1] == 1 \
-                and b.shape[0] == s.shape[0] and b.shape[2:] == s.shape[2:]:
-            return b.at[:, slot].set(s[:, 0])        # (L, B, …) cache leaf
-        if b.ndim >= 1 and s.ndim == b.ndim and s.shape[0] == 1 \
-                and b.shape[1:] == s.shape[1:]:
-            return b.at[slot].set(s[0])              # (B, …) leaf (pos)
-        return b                                      # shared leaf (signs)
-
-    caches = jax.tree.map(put, batched.caches, single.caches)
-    pos = batched.pos.at[slot].set(single.pos[0])
-    return decode_lib.DecodeState(caches=caches, pos=pos)
-
-
-class BatchScheduler:
     def __init__(self, cfg, params, *, slots: int, max_seq: int,
                  eos_id: Optional[int] = None, greedy: bool = True):
-        if not cfg.decode_supported:
-            raise ValueError(f"{cfg.name} is encoder-only")
-        self.cfg = cfg
-        self.params = params
-        self.slots = slots
-        self.max_seq = max_seq
-        self.eos_id = eos_id
-        self.state = decode_lib.init_decode_state(cfg, slots, max_seq)
-        self.active: list[Optional[Request]] = [None] * slots
-        self.last_token = jnp.zeros((slots, 1), jnp.int32)
-        self.queue: list[Request] = []
-        self.finished: list[Request] = []
-        self._step = recompile_lib.register(
-            "serve.decode_step", jax.jit(
-                lambda p, st, t: decode_lib.decode_step(cfg, p, st, t)))
-        self._prefill = recompile_lib.register(
-            "serve.prefill", jax.jit(
-                lambda p, t: decode_lib.prefill(cfg, p, t, max_seq)))
-
-    # -- client API ----------------------------------------------------------
-    def submit(self, req: Request) -> None:
-        if obs_lib.enabled():
-            req.submit_time = time.perf_counter()
-            obs_lib.counter("serve.submitted", 1, prompt_len=len(req.prompt))
-        self.queue.append(req)
-
-    def idle(self) -> bool:
-        return not self.queue and all(r is None for r in self.active)
-
-    def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
-        steps = 0
-        while not self.idle() and steps < max_steps:
-            self.step()
-            steps += 1
-        return self.finished
-
-    # -- engine --------------------------------------------------------------
-    def step(self) -> None:
-        self._refill()
-        occupancy = sum(r is not None for r in self.active)
-        if obs_lib.enabled():
-            obs_lib.gauge("serve.queue_depth", len(self.queue))
-            obs_lib.gauge("serve.active_slots", occupancy, slots=self.slots)
-            obs_lib.histogram("serve.batch_occupancy",
-                              occupancy / self.slots)
-        if occupancy == 0:
-            return
-        with obs_lib.span("serve.decode_step", occupancy=occupancy):
-            logits, self.state = self._step(self.params, self.state,
-                                            self.last_token)
-        obs_lib.counter("serve.tokens", occupancy)
-        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self.last_token = next_tok[:, None]
-        for slot, req in enumerate(self.active):
-            if req is None:
-                continue
-            tok = int(next_tok[slot])
-            req.tokens_out.append(tok)
-            hit_eos = self.eos_id is not None and tok == self.eos_id
-            if hit_eos or len(req.tokens_out) >= req.max_new_tokens \
-                    or int(self.state.pos[slot]) >= self.max_seq - 1:
-                req.done = True
-                self._retire(req, "eos" if hit_eos else
-                             ("budget" if len(req.tokens_out)
-                              >= req.max_new_tokens else "max_seq"))
-                self.active[slot] = None
-
-    def _retire(self, req: Request, reason: str) -> None:
-        self.finished.append(req)
-        if not obs_lib.enabled():
-            return
-        req.finish_time = time.perf_counter()
-        obs_lib.counter("serve.requests", 1, reason=reason,
-                        tokens=len(req.tokens_out))
-        if req.submit_time is not None:
-            obs_lib.histogram("serve.request_latency_s",
-                              req.finish_time - req.submit_time,
-                              rid=req.rid)
-
-    def _refill(self) -> None:
-        for slot in range(self.slots):
-            if self.active[slot] is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            with obs_lib.span("serve.prefill", slot=slot,
-                              prompt_len=len(req.prompt)):
-                logits1, state1 = self._prefill(self.params,
-                                                req.prompt[None, :])
-            self.state = _scatter_slot(self.state, state1, slot)
-            first = int(jnp.argmax(logits1[0]))
-            req.tokens_out.append(first)
-            self.last_token = self.last_token.at[slot, 0].set(first)
-            self.active[slot] = req
+        warnings.warn(
+            "repro.serve.BatchScheduler is deprecated; use "
+            "repro.serve.Engine(cfg, params, ServeConfig(slots=..., "
+            "max_seq=..., eos_id=...))", DeprecationWarning, stacklevel=2)
+        super().__init__(cfg, params,
+                         ServeConfig(slots=slots, max_seq=max_seq,
+                                     eos_id=eos_id, greedy=greedy))

@@ -1,0 +1,226 @@
+"""Serve engine v2: correctness, the prefix contract, exhaustion, the
+deprecated v1 alias, and the load generator."""
+import dataclasses
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import decode as decode_lib
+from repro.models import model as model_lib
+from repro.serve import (BatchScheduler, Engine, EngineExhausted, LoadConfig,
+                         Request, ServeConfig, generate,
+                         verify_prefix_contract)
+
+
+def _model(arch="yi-6b", bits=0):
+    cfg = configs.get_reduced(arch)
+    if bits:
+        cfg = dataclasses.replace(cfg, kv_quant_bits=bits)
+    return cfg, model_lib.init_params(jax.random.key(0), cfg)
+
+
+def _isolated_greedy(cfg, params, prompt, n_new, max_seq):
+    logits, state = decode_lib.prefill(cfg, params, prompt[None, :], max_seq)
+    toks = [int(jnp.argmax(logits[0]))]
+    cur = jnp.array([[toks[-1]]], jnp.int32)
+    for _ in range(n_new - 1):
+        logits, state = decode_lib.decode_step(cfg, params, state, cur)
+        toks.append(int(jnp.argmax(logits[0])))
+        cur = jnp.array([[toks[-1]]], jnp.int32)
+    return toks
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "xlstm-350m"])
+def test_engine_matches_isolated_generation(arch):
+    """Cold requests through shared slots decode exactly what each gets in
+    isolation — continuous batching must not leak state across refills."""
+    cfg, params = _model(arch)
+    max_seq, n_new = 48, 5
+    prompts = [jax.random.randint(jax.random.key(20 + i), (4 + i,), 0,
+                                  cfg.vocab_size, jnp.int32)
+               for i in range(5)]
+    eng = Engine(cfg, params, ServeConfig(slots=2, max_seq=max_seq))
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=n_new))
+    finished = eng.run_to_completion()
+    assert len(finished) == 5
+    by_rid = {r.rid: r for r in finished}
+    for i, p in enumerate(prompts):
+        want = _isolated_greedy(cfg, params, p, n_new, max_seq)
+        assert by_rid[i].tokens_out == want, (i, by_rid[i].tokens_out, want)
+        assert by_rid[i].admission == "cold"
+        assert by_rid[i].ttft_s is not None and by_rid[i].ttft_s >= 0
+
+
+@pytest.mark.parametrize("bits", [0, 8], ids=["f32", "quant8"])
+def test_prefix_hit_bitexact_with_cold(bits):
+    """THE contract: a prefix-hit admission's cached K/V (packed words +
+    scales when quantized), positions and greedy tokens are bitwise
+    identical to a cold admission prefilling the same prefix on the spot."""
+    cfg, params = _model(bits=bits)
+    rng = np.random.default_rng(3)
+    evidence = verify_prefix_contract(
+        cfg, params, ServeConfig(slots=2, max_seq=48),
+        rng.integers(0, cfg.vocab_size, 12, dtype=np.int32),
+        rng.integers(0, cfg.vocab_size, 5, dtype=np.int32))
+    assert evidence["tokens"] == 4
+    assert evidence["entry_bytes"] > 0
+
+
+def test_prefix_and_cold_requests_interleave():
+    """Prefixed and plain requests share slots; a prefixed request's output
+    equals a cold request over prefix+suffix token-for-token is NOT required
+    (different admission programs) — but its stream must match another
+    engine admitting the same (prefix, suffix) pair the same way."""
+    cfg, params = _model()
+    scfg = ServeConfig(slots=2, max_seq=48)
+    prefix = np.arange(10, dtype=np.int32) + 3
+    suffix = np.arange(4, dtype=np.int32)
+
+    def run(interleaved: bool):
+        eng = Engine(cfg, params, scfg)
+        eng.register_prefix("sys", prefix)
+        reqs = [Request(rid=0, prompt=jnp.asarray(suffix),
+                        max_new_tokens=4, prefix_id="sys")]
+        if interleaved:
+            reqs.append(Request(rid=1, prompt=jnp.arange(6, dtype=jnp.int32),
+                                max_new_tokens=4))
+        for r in reqs:
+            eng.submit(r)
+        out = eng.run_to_completion()
+        return {r.rid: r for r in out}
+
+    solo = run(interleaved=False)
+    mixed = run(interleaved=True)
+    assert solo[0].tokens_out == mixed[0].tokens_out
+    assert solo[0].admission == "prefix_cold"     # first engine, lazy prefill
+    assert mixed[1].admission == "cold"
+
+
+def test_extend_prefix_append_only_equivalence():
+    """`extend_prefix(p, more)` then a hit on suffix s ≡ a hit on the
+    ORIGINAL prefix with prompt more+s: both decode the same tokens over
+    the same positions, so the streams are identical."""
+    cfg, params = _model(bits=8)
+    scfg = ServeConfig(slots=1, max_seq=48)
+    prefix = np.arange(8, dtype=np.int32) + 1
+    more = np.asarray([5, 9, 2], np.int32)
+    suffix = np.asarray([7, 4], np.int32)
+
+    eng_a = Engine(cfg, params, scfg)
+    eng_a.register_prefix("p", prefix, prefill=True)
+    eng_a.extend_prefix("p", more)
+    assert eng_a.prefix_cache.peek("p").length == len(prefix) + len(more)
+    eng_a.submit(Request(rid=0, prompt=jnp.asarray(suffix),
+                         max_new_tokens=4, prefix_id="p"))
+    (ra,) = eng_a.run_to_completion()
+    assert ra.admission == "prefix_hit"
+
+    eng_b = Engine(cfg, params, scfg)
+    eng_b.register_prefix("p", prefix, prefill=True)
+    eng_b.submit(Request(rid=0,
+                         prompt=jnp.asarray(np.concatenate([more, suffix])),
+                         max_new_tokens=4, prefix_id="p"))
+    (rb,) = eng_b.run_to_completion()
+    assert rb.admission == "prefix_hit"
+    assert ra.tokens_out == rb.tokens_out
+
+    # growing an unknown or over-long prefix is refused loudly
+    with pytest.raises(KeyError):
+        eng_a.extend_prefix("nope", more)
+    with pytest.raises(ValueError):
+        eng_a.extend_prefix("p", np.zeros(scfg.max_seq, np.int32))
+
+
+def test_run_to_completion_raises_exhausted():
+    """The v1 scheduler silently returned partials when max_steps ran out;
+    v2 raises `EngineExhausted` carrying the partial results instead."""
+    cfg, params = _model()
+    eng = Engine(cfg, params, ServeConfig(slots=1, max_seq=64))
+    for i in range(2):
+        eng.submit(Request(rid=i, prompt=jnp.arange(3, dtype=jnp.int32),
+                           max_new_tokens=30))
+    with pytest.raises(EngineExhausted) as exc:
+        eng.run_to_completion(max_steps=3)
+    assert exc.value.steps == 3
+    assert exc.value.pending + exc.value.active >= 1
+    assert isinstance(exc.value.finished, list)
+    # a sane budget drains the same engine fine afterwards
+    finished = eng.run_to_completion()
+    assert len(finished) == 2 and all(r.done for r in finished)
+
+
+def test_submit_and_register_validation():
+    cfg, params = _model()
+    eng = Engine(cfg, params, ServeConfig(slots=1, max_seq=16))
+    with pytest.raises(KeyError):
+        eng.submit(Request(rid=0, prompt=jnp.arange(2, dtype=jnp.int32),
+                           prefix_id="unregistered"))
+    with pytest.raises(ValueError):
+        eng.submit(Request(rid=0, prompt=jnp.zeros((0,), jnp.int32)))
+    with pytest.raises(ValueError):
+        eng.register_prefix("big", np.zeros(16, np.int32))   # >= max_seq
+    with pytest.raises(ValueError):
+        ServeConfig(slots=0, max_seq=16)
+
+
+def test_batchscheduler_alias_warns_and_matches_engine():
+    """The v1 name still works — same results as Engine — but constructing
+    it warns. Importing repro.serve must NOT warn (CI guards this too)."""
+    cfg, params = _model()
+    prompt = jnp.arange(5, dtype=jnp.int32)
+
+    with pytest.warns(DeprecationWarning, match="BatchScheduler"):
+        sched = BatchScheduler(cfg, params, slots=2, max_seq=32)
+    assert isinstance(sched, Engine)
+    sched.submit(Request(rid=0, prompt=prompt, max_new_tokens=4))
+    (old,) = sched.run_to_completion()
+
+    eng = Engine(cfg, params, ServeConfig(slots=2, max_seq=32))
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=4))
+    (new,) = eng.run_to_completion()
+    assert old.tokens_out == new.tokens_out
+
+
+def test_import_serve_emits_no_deprecation_warning():
+    """`import repro.serve` stays warning-free — only *constructing* the
+    deprecated alias warns. Run in a subprocess so this module's own
+    imports can't mask a regression."""
+    proc = subprocess.run(
+        [sys.executable, "-W", "error::DeprecationWarning", "-c",
+         "import repro.serve"],
+        capture_output=True, text=True, timeout=240)
+    assert proc.returncode == 0, proc.stderr
+
+
+# ---------------------------------------------------------------------------
+# Load generator
+# ---------------------------------------------------------------------------
+def test_loadgen_is_deterministic_and_open_loop():
+    lc = LoadConfig(n_requests=20, base_rate=50.0, burst_rate=200.0,
+                    prompt_len=(3, 6), max_new_tokens=(2, 5),
+                    prefix_ratio=0.4, seed=9)
+    a1 = generate(lc, vocab_size=100, prefix_id="p",
+                  prefix_tokens=np.arange(6, dtype=np.int32))
+    a2 = generate(lc, vocab_size=100, prefix_id="p",
+                  prefix_tokens=np.arange(6, dtype=np.int32))
+    assert len(a1) == 20
+    assert [x.time for x in a1] == [x.time for x in a2]
+    assert all(b.time >= a.time for a, b in zip(a1, a1[1:]))
+    for x1, x2 in zip(a1, a2):
+        assert np.array_equal(np.asarray(x1.request.prompt),
+                              np.asarray(x2.request.prompt))
+    hit = [x for x in a1 if x.request.prefix_id is not None]
+    cold = [x for x in a1 if x.request.prefix_id is None]
+    assert hit and cold
+    # cold prompts carry the prefix inline: same token coverage either way
+    assert all(len(x.request.prompt) >= 6 + lc.prompt_len[0] for x in cold)
+    assert all(len(x.request.prompt) <= lc.prompt_len[1] for x in hit)
+    # burst phases really modulate the rate
+    assert lc.rate_at(0.1) == lc.burst_rate
+    assert lc.rate_at(lc.burst_len_s + 0.1) == lc.base_rate

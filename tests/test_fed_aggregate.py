@@ -257,6 +257,40 @@ def test_codec_spec_unknown_name_raises():
         registry.codec_spec("nope", 2.0, {})
 
 
+def test_make_accepts_spec_tuple():
+    """make(spec) rebuilds a codec from its canonical identity —
+    make(c.spec).spec == c.spec — so checkpoints and benchmarks can
+    round-trip codecs without re-plumbing the original kwargs."""
+    for args in (("ndsc", 1.5, {"chunk": 64}),
+                 ("ndsc", [1.0, 2.0], {"chunk": 32}),   # per-leaf budgets
+                 ("dsc", 2.0, {"dithered": True}),
+                 ("qsgd", 4.0, {}),
+                 ("topk", 2.0, {"quant_levels": 64})):
+        name, budget, kwargs = args
+        direct = registry.make(name, budget, **kwargs)
+        rebuilt = registry.make(direct.spec)
+        assert rebuilt.spec == direct.spec, args
+        assert rebuilt.name == direct.name
+        # and the spec constructor alone agrees with codec_spec
+        assert registry.make(
+            registry.codec_spec(name, budget, kwargs)).spec == direct.spec
+    # spec-form rejects extra arguments and malformed tuples
+    c = registry.make("ndsc", 1.5)
+    with pytest.raises(ValueError, match="no extra"):
+        registry.make(c.spec, 2.0)
+    with pytest.raises(ValueError, match="no extra"):
+        registry.make(c.spec, chunk=32)
+    with pytest.raises(ValueError, match="malformed"):
+        registry.make(("ndsc", 1.5))
+    # a spec-rebuilt codec encodes/decodes identically to the original
+    key = jax.random.key(0)
+    tree = {"w": jax.random.normal(jax.random.key(1), (96,))}
+    wire_a = c.encode(key, tree)
+    wire_b = registry.make(c.spec).encode(key, tree)
+    for xa, xb in zip(jax.tree.leaves(wire_a), jax.tree.leaves(wire_b)):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+
 def test_equivalent_make_calls_share_one_cohort_and_compile():
     """Clients built with and without the factory-default kwargs land in ONE
     cohort: a single vmapped round/decode program is compiled, not two."""

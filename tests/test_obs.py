@@ -14,7 +14,7 @@ from repro.models import model as model_lib
 from repro.obs import core as obs
 from repro.obs import recompile, report, trace as trace_lib
 from repro.obs.sinks import MemorySink, load_jsonl
-from repro.serve import BatchScheduler, Request
+from repro.serve import Engine, Request, ServeConfig
 
 
 # ---------------------------------------------------------------------------
@@ -249,7 +249,7 @@ def test_scheduler_tokens_identical_and_metrics_present():
                for i in range(3)]
 
     def generate():
-        sched = BatchScheduler(cfg, params, slots=2, max_seq=32)
+        sched = Engine(cfg, params, ServeConfig(slots=2, max_seq=32))
         for i, p in enumerate(prompts):
             sched.submit(Request(rid=i, prompt=p, max_new_tokens=4))
         done = sched.run_to_completion()
@@ -267,7 +267,7 @@ def test_scheduler_tokens_identical_and_metrics_present():
     assert s["counters"]["serve.requests"]["total"] == 3.0
     assert s["hists"]["serve.request_latency_s"]["count"] == 3
     assert s["gauges"]["serve.queue_depth"]["last"] == 0.0
-    assert {"serve.prefill", "serve.decode_step"} <= set(s["spans"])
+    assert {"serve.admit_cold", "serve.decode_step"} <= set(s["spans"])
     reasons = {e["attrs"]["reason"] for e in o.memory_events()
                if e["name"] == "serve.requests"}
     assert reasons <= {"eos", "budget", "max_seq"} and reasons

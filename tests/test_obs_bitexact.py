@@ -17,10 +17,12 @@ from repro.dist import step as step_lib
 from repro.dist.gradcomp import GradCompConfig
 from repro.fed import (ClientConfig, FedConfig, Federation, ServerConfig,
                        registry)
+from repro.models import model as model_lib
 from repro.obs import core as obs
 from repro.obs import recompile
 from repro.obs.sinks import MemorySink
 from repro.optimizer import sgd
+from repro.serve import Engine, Request, ServeConfig
 
 
 def _tree_equal(a, b) -> bool:
@@ -105,6 +107,52 @@ def test_federation_run_obs_argument_scopes_session():
     metas = [e for e in session.memory_events()
              if e["type"] == "meta" and e["name"] == "fed.run.summary"]
     assert len(metas) == 1 and metas[0]["data"]["rounds"] == 2
+
+
+def test_serve_engine_bit_exact_and_no_extra_recompiles():
+    """The serve engine under obs: token streams, admissions and the final
+    decode state are bitwise identical with observability on or off, and
+    obs adds zero compiled specializations (the engine's jitted programs
+    are shared process-wide per (config, max_seq))."""
+    cfg = configs.get_reduced("yi-6b")
+    params = model_lib.init_params(jax.random.key(0), cfg)
+    prefix = np.arange(9, dtype=np.int32) + 2
+    prompts = [jnp.arange(3 + i, dtype=jnp.int32) for i in range(4)]
+
+    def run():
+        eng = Engine(cfg, params, ServeConfig(slots=2, max_seq=48))
+        eng.register_prefix("sys", prefix, prefill=True)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=4,
+                               prefix_id="sys" if i % 2 else None))
+        finished = eng.run_to_completion()
+        return ([(r.rid, r.admission, r.tokens_out) for r in finished],
+                eng.state)
+
+    run()    # warm the process-shared jitted programs + specializations
+
+    base = recompile.counts()
+    out_off, state_off = run()
+    compiles_off = recompile.delta(base, recompile.counts())
+
+    base = recompile.counts()
+    o = obs.enable()
+    out_on, state_on = run()
+    obs.disable()
+    compiles_on = recompile.delta(base, recompile.counts())
+
+    assert out_off == out_on                      # streams + admissions
+    assert _tree_equal((state_off.caches, state_off.pos),
+                       (state_on.caches, state_on.pos))
+    assert compiles_on == compiles_off
+    s = o.summary()
+    assert s["counters"]["serve.submitted"]["count"] == 4
+    assert s["counters"]["serve.requests"]["count"] == 4
+    assert s["counters"]["serve.prefix.hit"]["count"] == 2
+    assert s["counters"]["serve.prefill_bytes_saved"]["total"] > 0
+    assert s["hists"]["serve.ttft_s"]["count"] == 4
+    assert "serve.decode_step" in s["spans"]
+    assert "serve.admit_prefix" in s["spans"]
 
 
 def test_dist_step_bit_exact_and_no_extra_recompiles(mesh):

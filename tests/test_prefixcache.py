@@ -1,0 +1,179 @@
+"""Prefix cache: scatter/extract round-trip identity + LRU behavior.
+
+The round-trip `extract_slot` -> `scatter_slot` being bitwise the identity
+is what makes a prefix-hit admission bit-exact with a cold one (the engine
+contract in `repro.serve.verify_prefix_contract` reduces to it), so it is
+property-tested here across every decode-capable block family: plain
+attention, NDSC-quantized attention, recurrent (xlstm), and hybrid
+(attention ring + SSM state).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.models import decode as decode_lib
+from repro.models import model as model_lib
+from repro.serve import PrefixCache
+
+# family -> (arch, kv_quant_bits): attention, quantized attention,
+# recurrent, hybrid — every decode cache taxonomy in models/decode.py
+FAMILIES = {
+    "attn": ("yi-6b", 0),
+    "attn_quant8": ("yi-6b", 8),
+    "recurrent": ("xlstm-350m", 0),
+    "hybrid": ("hymba-1.5b", 0),
+}
+
+_CACHE = {}
+
+
+def _model(family):
+    if family not in _CACHE:
+        arch, bits = FAMILIES[family]
+        cfg = configs.get_reduced(arch)
+        if bits:
+            cfg = dataclasses.replace(cfg, kv_quant_bits=bits)
+        params = model_lib.init_params(jax.random.key(0), cfg)
+        _CACHE[family] = (cfg, params)
+    return _CACHE[family]
+
+
+def _leaves(state):
+    return jax.tree.leaves((state.caches, state.pos))
+
+
+def _assert_bitwise(a, b, msg):
+    la, lb = _leaves(a), _leaves(b)
+    assert len(la) == len(lb), msg
+    for x, y in zip(la, lb):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), msg
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+@given(st.integers(0, 10_000), st.integers(1, 14), st.integers(0, 2))
+@settings(max_examples=10, deadline=None)
+def test_extract_scatter_roundtrip_is_identity(family, seed, plen, slot):
+    """extract(scatter(entry)) == entry, bitwise, for random prefill states
+    of every cache family — including packed quantized words/scales."""
+    cfg, params = _model(family)
+    max_seq = 32
+    prompt = jax.random.randint(jax.random.key(seed), (plen,), 0,
+                                cfg.vocab_size, jnp.int32)
+    _, st1 = decode_lib.prefill(cfg, params, prompt[None, :], max_seq)
+    entry = decode_lib.extract_slot(st1, 0)          # trimmed to plen
+
+    batched = decode_lib.init_decode_state(cfg, 3, max_seq)
+    seated = decode_lib.scatter_slot(batched, entry, slot)
+    back = decode_lib.extract_slot(seated, slot)
+    _assert_bitwise(back, entry,
+                    f"{family}: extract∘scatter is not the identity")
+    # the other slots stay untouched (still all-zero / init values)
+    for other in range(3):
+        if other == slot:
+            continue
+        _assert_bitwise(decode_lib.extract_slot(seated, other, trim=False),
+                        decode_lib.extract_slot(batched, other, trim=False),
+                        f"{family}: scatter into slot {slot} leaked into "
+                        f"slot {other}")
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_seated_entry_continues_like_fresh_prefill(family):
+    """Seating the TRIMMED cache entry is indistinguishable from seating
+    the full untrimmed slot (bitwise — trimming drops only dead positions),
+    and the seated slot's continuation tracks the batch-1 continuation it
+    came from. The cross-batch-shape comparison is numeric, not bitwise:
+    XLA reduction order may differ between batch shapes, which is exactly
+    why the engine contract compares equal-shape runs."""
+    cfg, params = _model(family)
+    max_seq = 32
+    prompt = jax.random.randint(jax.random.key(7), (6,), 0,
+                                cfg.vocab_size, jnp.int32)
+    logits, st1 = decode_lib.prefill(cfg, params, prompt[None, :], max_seq)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+
+    base = decode_lib.init_decode_state(cfg, 2, max_seq)
+    seat_t = decode_lib.scatter_slot(
+        base, decode_lib.extract_slot(st1, 0), 1)
+    seat_f = decode_lib.scatter_slot(
+        base, decode_lib.extract_slot(st1, 0, trim=False), 1)
+    _assert_bitwise(seat_t, seat_f,
+                    f"{family}: trimming the entry changed the seated state")
+
+    toks2 = jnp.concatenate([jnp.zeros_like(tok), tok])    # slot 1 = tok
+    l_new, st_new = decode_lib.decode_step(cfg, params, seat_t, toks2)
+    l_ref, _ = decode_lib.decode_step(cfg, params, st1, tok)
+    assert int(st_new.pos[1]) == int(prompt.shape[0]) + 1
+    np.testing.assert_allclose(np.asarray(l_new[1]), np.asarray(l_ref[0]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_expand_state_roundtrips_trimmed_entry():
+    cfg, params = _model("attn_quant8")
+    _, st1 = decode_lib.prefill(
+        cfg, params, jnp.arange(5, dtype=jnp.int32)[None, :], 24)
+    entry = decode_lib.extract_slot(st1, 0)
+    full = decode_lib.expand_state(cfg, entry, 24)
+    _assert_bitwise(decode_lib.extract_slot(full, 0), entry,
+                    "expand_state lost entry content")
+    assert int(full.pos[0]) == 5
+
+
+# ---------------------------------------------------------------------------
+# LRU cache behavior (host-side, no model needed beyond small states)
+# ---------------------------------------------------------------------------
+def _entry_state(cfg, tokens, max_seq=24):
+    params = _model("attn")[1]
+    _, st1 = decode_lib.prefill(cfg, params, jnp.asarray(tokens)[None, :],
+                                max_seq)
+    return decode_lib.extract_slot(st1, 0)
+
+
+def test_lru_eviction_and_counters():
+    cfg = _model("attn")[0]
+    cache = PrefixCache(max_entries=2)
+    for pid in ("a", "b", "c"):
+        toks = np.arange(3, dtype=np.int32)
+        cache.put(pid, toks, _entry_state(cfg, toks))
+    assert len(cache) == 2 and cache.evictions == 1
+    assert "a" not in cache and "b" in cache and "c" in cache
+
+    assert cache.get("a") is None                 # miss counted
+    assert cache.get("b") is not None             # hit counted, b now MRU
+    toks = np.arange(3, dtype=np.int32)
+    cache.put("d", toks, _entry_state(cfg, toks))  # evicts c, not b
+    assert "b" in cache and "c" not in cache
+    s = cache.stats()
+    assert s == {"entries": 2, "bytes": cache.nbytes, "hits": 1,
+                 "misses": 1, "evictions": 2}
+    # peek touches neither the LRU order nor the counters
+    assert cache.peek("nope") is None and cache.peek("d") is not None
+    assert cache.stats()["hits"] == 1 and cache.stats()["misses"] == 1
+
+
+def test_bytes_accounting_and_quantized_entries_are_smaller():
+    """Entry bytes sum to the cache total, and an 8-bit NDSC entry for the
+    same prefix costs a fraction of the f32 one — the serve-time HBM story."""
+    cfg_f32 = _model("attn")[0]
+    cfg_q8, params_q8 = _model("attn_quant8")
+    toks = np.arange(8, dtype=np.int32)
+
+    cache = PrefixCache(max_entries=4)
+    e32 = cache.put("f32", toks, _entry_state(cfg_f32, toks))
+    _, st_q = decode_lib.prefill(cfg_q8, params_q8,
+                                 jnp.asarray(toks)[None, :], 24)
+    eq8 = cache.put("q8", toks, decode_lib.extract_slot(st_q, 0))
+    assert cache.nbytes == e32.nbytes + eq8.nbytes
+    assert e32.nbytes > 0 and eq8.nbytes > 0
+    assert eq8.nbytes < e32.nbytes / 2
+    assert e32.length == eq8.length == 8
+
+
+def test_rejects_zero_entry_budget():
+    with pytest.raises(ValueError):
+        PrefixCache(max_entries=0)
