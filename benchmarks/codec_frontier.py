@@ -1,0 +1,423 @@
+"""Codec frontier: equal-total-bits error sweep over the repro.codecs stack.
+
+For each budget R ∈ r_values the NDSC codec's ANALYTIC wire size on an
+n-dim leaf anchors an equal-total-bits target; every other codec is then
+calibrated to spend at most that many bits (binary search over its own
+`wire_bits` audit — survivors for the sparsifiers, budget for RATQ/QSGD)
+and the compression error E‖C(y)−y‖/‖y‖ is measured on the paper's
+heavy-tailed Gaussian³ vectors (§5). Compared at every point:
+
+  ndsc                  the paper's chunked embedding codec (the anchor)
+  sparsify_then_embed   top-k survivors, democratically embedded + quantized
+                        (quantizer bits chosen per point from a small grid)
+  topk (plain)          top-k with EXACT f32 survivor values — the classic
+                        sparsifier the paper's hybrid is measured against
+  topk (q8)             the repo baseline default (256-level survivors)
+  ratq                  adaptive fixed-length ladder quantizer (M&T)
+  qsgd                  stochastic level + sign baseline (n/a when even
+                        s = 1 exceeds the target)
+
+Three gates ride the sweep and the benchmark REFUSES to report without
+them (they raise, so `benchmarks.run` records the failure):
+
+  * `ndsc_bitexact` — the repro.codecs ndsc pipeline must produce wire
+    payloads (words / scales / masks), decodes, fused EF residuals and
+    ledger bytes BITWISE identical to the direct `repro.dist.gradcomp`
+    encode across bits ∈ {1,2,4,8} × keep ∈ {0.25, 1} × {det, dither}.
+    CI runs this with and without REPRO_FORCE_PALLAS=1.
+  * `ste_beats_plain_topk` — at every swept R the sparsify-then-embed
+    hybrid must beat plain (exact-value) top-k at equal total bits: the
+    bits saved by coarse embedded quantization buy more survivors than
+    exact values do.
+  * `ratq_single_compile` — one jitted encode→decode per R serves EVERY
+    round: sweeping round_idx never changes a shape, so the compile cache
+    stays at exactly one entry per swept budget.
+
+A small §5 convex protocol (the Fig. 1d ℓ2-regularized least-squares
+problem with DGD-DEF) closes the loop: the same calibrated codecs drive
+`optim.dqgd` at `protocol_r` bits/dim and the final normalized distance
+is reported next to unquantized GD.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import gaussian_cubed, print_table
+from repro import codecs
+from repro.codecs import stages
+from repro.core import optim as O
+from repro.dist import gradcomp as G
+from repro.obs import recompile as recompile_lib
+
+R_VALUES = (0.1, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0)
+STE_BITS_GRID = (1, 2, 4, 8)
+
+
+# ---------------------------------------------------------------------------
+# Gate 1: the codecs ndsc pipeline is bitwise the gradcomp encode
+# ---------------------------------------------------------------------------
+def _bitwise_equal(a, b) -> bool:
+    a, b = np.asarray(a), np.asarray(b)
+    return (a.dtype == b.dtype and a.shape == b.shape
+            and np.array_equal(a.view(np.uint8), b.view(np.uint8)))
+
+
+def ndsc_bitexact_gate(n: int = 512, chunk: int = 64, seed: int = 0,
+                       round_idx: int = 3) -> int:
+    """Assert payload/decode/EF/ledger equality of `codecs.make("ndsc")`
+    against the direct gradcomp path on every (bits, keep, dither) point;
+    returns the number of grid points checked."""
+    key = jax.random.key(seed)
+    tree = {"w": gaussian_cubed(jax.random.fold_in(key, 0), (n,)),
+            "b": gaussian_cubed(jax.random.fold_in(key, 1), (3, 7))}
+    leaves, _ = jax.tree.flatten(tree)
+    ekey = jax.random.fold_in(key, 7)
+    checked = 0
+    for bits in (1, 2, 4, 8):
+        for kf in (0.25, 1.0):
+            for dith in (False, True):
+                drop = kf < 1.0
+                cfg = G.GradCompConfig(
+                    bits=bits, chunk=chunk, keep_fraction=kf,
+                    exact_keep=drop, dithered=dith, error_feedback=True,
+                    seed=0)
+                pipeline = stages.Pipeline(
+                    transform=stages.Transform("hadamard", seed=0),
+                    sparsify=(stages.Sparsify("chunk_drop", fraction=kf)
+                              if drop else stages.Sparsify()),
+                    quantize=stages.Quantize(
+                        "dithered" if dith else "uniform", bits=bits),
+                    chunk=chunk)
+                codec = pipeline.tree_codec(f"gate(b{bits},k{kf},d{dith})")
+                meta = codec.meta(tree)
+                tag = f"bits={bits} keep={kf} dithered={dith}"
+
+                wire = codec.encode(ekey, tree, round_idx)
+                plist = meta.treedef.flatten_up_to(wire)
+                direct = [G.encode_leaf(x, i, cfg, round_idx,
+                                        key=jax.random.fold_in(ekey, i))
+                          for i, x in enumerate(leaves)]
+                for p, d in zip(plist, direct):
+                    assert set(p) == set(d), f"payload keys differ at {tag}"
+                    for field in p:
+                        assert _bitwise_equal(p[field], d[field]), \
+                            f"{field} not bitwise equal at {tag}"
+
+                dec = jax.tree.leaves(codec.decode(wire, meta))
+                for i, (d, (size, shape, dtype)) in enumerate(
+                        zip(direct, meta.infos)):
+                    ref = G.decode_leaf(d, i, size, shape, dtype, cfg)
+                    assert _bitwise_equal(dec[i], ref), \
+                        f"decode differs at {tag}"
+
+                wire_ef, resid = codec.encode_ef(ekey, tree, meta, round_idx)
+                for i, (x, p, r, info) in enumerate(zip(
+                        leaves, meta.treedef.flatten_up_to(wire_ef),
+                        jax.tree.leaves(resid), meta.infos)):
+                    dp, dr = G.encode_leaf_ef(
+                        x, i, cfg, round_idx,
+                        key=jax.random.fold_in(ekey, i),
+                        residual_dtype=info[2])
+                    for field in p:
+                        assert _bitwise_equal(p[field], dp[field]), \
+                            f"EF {field} differs at {tag}"
+                    assert _bitwise_equal(r, dr), f"EF residual at {tag}"
+
+                realized = codec.wire_bytes(wire, meta)
+                direct_bytes = sum(G.wire_bytes_payload(d, cfg)
+                                   for d in direct)
+                assert abs(realized - direct_bytes) < 1e-9, \
+                    f"ledger bytes differ at {tag}"
+                audit = codec.wire_bits(tree)
+                direct_bits = G.wire_bytes_tree(
+                    leaves, cfg)["payload_bytes"] * 8.0
+                assert abs(audit - direct_bits) < 1e-6, \
+                    f"analytic audit differs at {tag}"
+                checked += 1
+    return checked
+
+
+# ---------------------------------------------------------------------------
+# Equal-total-bits calibration
+# ---------------------------------------------------------------------------
+def _template(n: int) -> dict:
+    return {"y": jax.ShapeDtypeStruct((n,), jnp.float32)}
+
+
+def _max_k(n: int, bits_of_k, target_bits: float) -> int:
+    """Largest k ∈ [1, n] with bits_of_k(k) ≤ target_bits (monotone)."""
+    if bits_of_k(1) > target_bits:
+        return 0
+    lo, hi = 1, n
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        if bits_of_k(mid) <= target_bits:
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo
+
+
+def _calibrate_ste(n: int, chunk: int, target_bits: float, seed: int):
+    """Best (codec, bits, k) on the quantizer grid fitting the target."""
+    tmpl = _template(n)
+    out = []
+    for bits in STE_BITS_GRID:
+        def bits_of_k(k, bits=bits):
+            return codecs.make("sparsify_then_embed", budget=1.0, bits=bits,
+                               chunk=chunk, k_fraction=k / n,
+                               seed=seed).wire_bits(tmpl)
+        k = _max_k(n, bits_of_k, target_bits)
+        if k >= 1:
+            out.append((codecs.make("sparsify_then_embed", budget=1.0,
+                                    bits=bits, chunk=chunk, k_fraction=k / n,
+                                    seed=seed), bits, k))
+    return out
+
+
+def _calibrate_topk(n: int, target_bits: float,
+                    quant_levels: Optional[int]):
+    tmpl = _template(n)
+
+    def bits_of_k(k):
+        return codecs.make("topk", k_fraction=k / n,
+                           quant_levels=quant_levels).wire_bits(tmpl)
+
+    k = _max_k(n, bits_of_k, target_bits)
+    if k < 1:
+        return None, 0
+    return codecs.make("topk", k_fraction=k / n,
+                       quant_levels=quant_levels), k
+
+
+def _calibrate_ratq(n: int, chunk: int, target_bits: float, seed: int):
+    """Feasible (codec, budget) candidates: the whole-bits rungs that fit
+    plus the largest continuous budget (which may trade bits for chunk
+    dropping); the caller keeps whichever measures best."""
+    tmpl = _template(n)
+
+    def fits(b: float) -> bool:
+        return codecs.make("ratq", budget=b, chunk=chunk,
+                           seed=seed).wire_bits(tmpl) <= target_bits
+
+    out = [(codecs.make("ratq", budget=float(b), chunk=chunk, seed=seed),
+            float(b)) for b in stages.PACKABLE_BITS if fits(float(b))]
+    lo, hi = 0.01, 8.0
+    if fits(lo):
+        for _ in range(30):
+            mid = 0.5 * (lo + hi)
+            if fits(mid):
+                lo = mid
+            else:
+                hi = mid
+        if all(abs(lo - b) > 1e-3 for _, b in out):
+            out.append((codecs.make("ratq", budget=lo, chunk=chunk,
+                                    seed=seed), lo))
+    return out
+
+
+def _calibrate_qsgd(n: int, target_bits: float):
+    """Largest level count s with n·(1 + log2(s+1)) + 32 ≤ target."""
+    per_dim = (target_bits - 32.0) / n - 1.0
+    if per_dim < 1.0:                       # even s = 1 (ternary) won't fit
+        return None, 0
+    s = max(1, int(2.0 ** per_dim - 1.0))
+    codec = codecs.make("qsgd", budget=math.log2(s + 1) + 1.0)
+    if codec.wire_bits(_template(n)) > target_bits + 1e-6:
+        return None, 0
+    return codec, s
+
+
+def _mean_err(codec, n: int, key, trials: int) -> float:
+    """E‖C(y)−y‖/‖y‖ over heavy-tailed draws (one jitted roundtrip)."""
+    y0 = gaussian_cubed(jax.random.fold_in(key, 0), (n,))
+    meta = codec.meta({"y": y0})
+
+    @jax.jit
+    def roundtrip(k, y):
+        wire = codec.encode(k, {"y": y}, 0)
+        return codec.decode(wire, meta)["y"]
+
+    tot = 0.0
+    for t in range(trials):
+        y = gaussian_cubed(jax.random.fold_in(key, 100 + t), (n,))
+        out = roundtrip(jax.random.fold_in(key, t), y)
+        tot += float(jnp.linalg.norm(out - y) / jnp.linalg.norm(y))
+    return tot / trials
+
+
+# ---------------------------------------------------------------------------
+# Gate 3: RATQ shapes are static across rounds at every swept budget
+# ---------------------------------------------------------------------------
+def ratq_recompile_gate(n: int, chunk: int, r_values, rounds: int,
+                        seed: int) -> dict:
+    """One compiled encode→decode per R serves every round_idx; asserts the
+    jit cache holds exactly one entry after the round sweep."""
+    key = jax.random.key(seed)
+    y = gaussian_cubed(key, (n,))
+    sizes = {}
+    for R in r_values:
+        codec = codecs.make("ratq", budget=R, chunk=chunk, seed=seed)
+        meta = codec.meta({"y": y})
+
+        def roundtrip(k, tree, round_idx, codec=codec, meta=meta):
+            return codec.decode(codec.encode(k, tree, round_idx), meta)
+
+        fn = recompile_lib.register(f"codec_frontier.ratq[R={R:g}]",
+                                    jax.jit(roundtrip))
+        for r in range(rounds):
+            jax.block_until_ready(
+                fn(jax.random.fold_in(key, r), {"y": y}, jnp.uint32(r)))
+        sizes[f"{R:g}"] = int(fn._cache_size())
+        assert sizes[f"{R:g}"] == 1, \
+            f"ratq recompiled across rounds at R={R}: " \
+            f"{sizes[f'{R:g}']} cache entries"
+    return sizes
+
+
+# ---------------------------------------------------------------------------
+# §5 convex protocol: DGD-DEF on heavy-tailed regularized least squares
+# ---------------------------------------------------------------------------
+def _protocol(named_codecs, n: int, m: int, steps: int, lam: float,
+              seed: int) -> list:
+    key = jax.random.key(seed)
+    k1, k2 = jax.random.split(key)
+    feats = gaussian_cubed(k1, (m, n))
+    feats = feats / jnp.linalg.norm(feats, axis=0, keepdims=True)
+    y_lab = jnp.sign(jax.random.normal(k2, (m,)))
+    h = feats.T @ feats / m + lam * jnp.eye(n)
+    rhs = feats.T @ y_lab / m
+    x_star = jnp.linalg.solve(h, rhs)
+    eigs = jnp.linalg.eigvalsh(h)
+    alpha = O.alpha_star(float(eigs[-1]), float(eigs[0]))
+    grad = lambda x: h @ x - rhs                               # noqa: E731
+    x0 = jnp.zeros((n,))
+    d0 = float(jnp.linalg.norm(x_star))
+
+    rows = []
+    for label, codec in named_codecs:
+        meta = codec.meta({"g": x0})
+
+        def roundtrip(k, g, codec=codec, meta=meta):
+            return codec.decode(codec.encode(k, {"g": g}, 0), meta)["g"]
+
+        trace = O.dqgd(grad, x0, roundtrip, alpha, steps, x_star=x_star)
+        rows.append([label, float(trace.dist_history[-1]) / d0])
+    trace = O.gd(grad, x0, alpha, steps, x_star=x_star)
+    rows.append(["unquantized GD", float(trace.dist_history[-1]) / d0])
+    return rows
+
+
+# ---------------------------------------------------------------------------
+def run(n: int = 1024, m: int = 400, chunk: int = 64,
+        r_values=R_VALUES, trials: int = 8, rounds: int = 5,
+        steps: int = 40, protocol_r: float = 0.5, lam: float = 0.05,
+        seed: int = 0) -> dict:
+    key = jax.random.key(seed)
+    bitexact_points = ndsc_bitexact_gate(n=min(n, 512), chunk=chunk,
+                                         seed=seed)
+    recompile_sizes = ratq_recompile_gate(n, chunk, r_values, rounds, seed)
+
+    tmpl = _template(n)
+    frontier, beats = [], {}
+    protocol_codecs = None
+    for R in r_values:
+        ndsc = codecs.make("ndsc", budget=R, chunk=chunk, seed=seed)
+        target = ndsc.wire_bits(tmpl)
+        kq = jax.random.fold_in(key, int(R * 1000))
+        row = {"R": R, "target_bits_per_dim": target / n,
+               "ndsc": _mean_err(ndsc, n, kq, trials)}
+
+        ste_best = None
+        for codec, bits, k in _calibrate_ste(n, chunk, target, seed):
+            err = _mean_err(codec, n, kq, trials)
+            if ste_best is None or err < ste_best[0]:
+                ste_best = (err, bits, k, codec)
+        if ste_best is None:
+            raise AssertionError(
+                f"sparsify_then_embed infeasible at R={R} "
+                f"(target {target:.0f} bits < one chunk) — shrink chunk")
+        row["ste"], row["ste_bits"], row["ste_k"] = ste_best[:3]
+
+        plain, k32 = _calibrate_topk(n, target, quant_levels=None)
+        if plain is None:
+            raise AssertionError(f"plain top-k infeasible at R={R}")
+        row["topk_plain"] = _mean_err(plain, n, kq, trials)
+        row["topk_plain_k"] = k32
+        q8, k8 = _calibrate_topk(n, target, quant_levels=256)
+        row["topk_q8"] = None if q8 is None else _mean_err(q8, n, kq, trials)
+        row["topk_q8_k"] = k8
+
+        ratq_best = None
+        for codec, budget in _calibrate_ratq(n, chunk, target, seed):
+            err = _mean_err(codec, n, kq, trials)
+            if ratq_best is None or err < ratq_best[0]:
+                ratq_best = (err, budget, codec)
+        row["ratq"] = None if ratq_best is None else ratq_best[0]
+        row["ratq_budget"] = 0.0 if ratq_best is None else ratq_best[1]
+        ratq = None if ratq_best is None else ratq_best[2]
+        ratq_budget = row["ratq_budget"]
+        qsgd, s = _calibrate_qsgd(n, target)
+        row["qsgd"] = None if qsgd is None else _mean_err(qsgd, n, kq,
+                                                          trials)
+        row["qsgd_levels"] = s
+
+        beats[f"{R:g}"] = bool(row["ste"] < row["topk_plain"])
+        frontier.append(row)
+        if abs(R - protocol_r) < 1e-9:
+            protocol_codecs = [
+                (f"ndsc(R={R:g})", ndsc),
+                (f"sparsify_then_embed(b{ste_best[1]},k={ste_best[2]})",
+                 ste_best[3]),
+                (f"plain top-k (k={k32})", plain),
+            ] + ([(f"ratq(R={ratq_budget:.2f})", ratq)] if ratq else []) \
+              + ([(f"qsgd(s={s})", qsgd)] if qsgd else [])
+
+    losing = [R for R, ok in beats.items() if not ok]
+    assert not losing, \
+        f"sparsify_then_embed did not beat plain top-k at R ∈ {losing}"
+
+    def fmt(v, digits=3):
+        return "n/a" if v is None else f"{v:.{digits}f}"
+
+    print_table(
+        f"codec frontier — E‖C(y)−y‖/‖y‖ at equal total bits "
+        f"(n={n}, heavy-tailed §5 vectors, {trials} trials)",
+        ["R", "bits/dim", "ndsc", "ste (bits,k)", "topk plain (k)",
+         "topk q8 (k)", "ratq", "qsgd"],
+        [[f"{r['R']:g}", f"{r['target_bits_per_dim']:.2f}",
+          fmt(r["ndsc"]),
+          f"{fmt(r['ste'])} (b{r['ste_bits']},k{r['ste_k']})",
+          f"{fmt(r['topk_plain'])} (k{r['topk_plain_k']})",
+          f"{fmt(r['topk_q8'])} (k{r['topk_q8_k']})",
+          fmt(r["ratq"]), fmt(r["qsgd"])] for r in frontier])
+
+    protocol_rows = None
+    if protocol_codecs is not None:
+        protocol_rows = _protocol(protocol_codecs, n=min(n, 784), m=m,
+                                  steps=steps, lam=lam, seed=seed)
+        print_table(
+            f"§5 convex protocol — ‖x_T − x*‖/‖x*‖ after {steps} steps "
+            f"(R = {protocol_r:g} bits/dim, DGD-DEF)",
+            ["method", "final normalized distance"],
+            [[label, f"{v:.3e}"] for label, v in protocol_rows])
+
+    return {
+        "ndsc_bitexact": True,                 # the gate raised otherwise
+        "ndsc_bitexact_points": bitexact_points,
+        "ratq_single_compile": True,
+        "ratq_cache_sizes": recompile_sizes,
+        "ste_beats_plain_topk": True,
+        "ste_beats_by_r": beats,
+        "frontier": frontier,
+        "protocol": protocol_rows,
+    }
+
+
+if __name__ == "__main__":
+    run()

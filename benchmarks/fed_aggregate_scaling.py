@@ -30,8 +30,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import print_table
-from repro.fed import (ServerConfig, registry, server as server_lib,
+from repro.fed import (ServerConfig, server as server_lib,
                        clients as clients_lib)
+from repro import codecs as registry
 from repro.optimizer import sgd
 
 

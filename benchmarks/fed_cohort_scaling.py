@@ -28,7 +28,8 @@ import numpy as np
 from benchmarks.common import print_table
 from benchmarks.fed_heterogeneous import make_problem, probe_norms
 from repro.fed import (AdaptiveConfig, ClientConfig, FedConfig, Federation,
-                       ServerConfig, budget, registry)
+                       ServerConfig, budget)
+from repro import codecs as registry
 
 
 def _timed_rounds(fed: Federation, cfg: FedConfig, rounds: int) -> float:

@@ -25,7 +25,8 @@ import numpy as np
 
 from benchmarks.common import print_table
 from repro.fed import (ClientConfig, FedConfig, Federation, ServerConfig,
-                       budget, registry)
+                       budget)
+from repro import codecs as registry
 
 
 def make_problem(m: int = 8, dim: int = 128, per_client: int = 256,

@@ -39,7 +39,8 @@ from benchmarks.common import print_table
 from benchmarks.fed_heterogeneous import make_problem
 from repro.dist.sharding import padded_lanes
 from repro.fed import (ClientConfig, FedConfig, Federation, ServerConfig,
-                       mesh as mesh_lib, registry)
+                       mesh as mesh_lib)
+from repro import codecs as registry
 
 
 def _timed_rounds(fed: Federation, cfg: FedConfig, rounds: int) -> float:

@@ -33,7 +33,8 @@ import jax.numpy as jnp
 
 from benchmarks.common import print_table
 from benchmarks.fed_heterogeneous import make_problem
-from repro.fed import ClientConfig, FedConfig, Federation, ServerConfig, registry
+from repro.fed import ClientConfig, FedConfig, Federation, ServerConfig
+from repro import codecs as registry
 from repro.obs import core as obs_lib
 from repro.obs import trace as trace_lib
 from repro.obs.sinks import MemorySink

@@ -8,9 +8,15 @@ invocations keep working.
 from __future__ import annotations
 
 import sys
+import warnings
 
 from benchmarks.hlo_report import (HEADER, main, markdown,  # noqa: F401
                                    table_rows)
+
+warnings.warn(
+    "benchmarks.roofline is a deprecated alias — import benchmarks."
+    "hlo_report (HLO table) or run the codec_roofline benchmark "
+    "(measured kernel roofline) instead", DeprecationWarning, stacklevel=2)
 
 if __name__ == "__main__":
     main(*sys.argv[1:])

@@ -48,6 +48,7 @@ ALL = {
     "fed_cohort": "fed_cohort_scaling",
     "fed_mesh": "fed_mesh_scaling",
     "codec_roofline": "codec_roofline",
+    "codec_frontier": "codec_frontier",
     "serve_load": "serve_load",
     "table1": "table1_compressors",
     "fig1a": "fig1a_compression_error",
@@ -74,6 +75,8 @@ TINY = {
                      chunk=32),
     "codec_roofline": dict(n_values=(128, 512), bits_values=(1, 4),
                            rows=16, reps=1),
+    "codec_frontier": dict(n=512, m=160, chunk=32, trials=3, rounds=3,
+                           steps=15),
     "serve_load": dict(slots=2, max_seq=64, prefix_len=24, n_requests=16,
                        base_rate=10.0, burst_rate=40.0, burst_period_s=1.0,
                        burst_len_s=0.3, prompt_len=(3, 6),

@@ -14,8 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.data import synthetic_regression
-from repro.fed import (ClientConfig, FedConfig, Federation, ServerConfig,
-                       registry)
+from repro.fed import (ClientConfig, FedConfig, Federation, ServerConfig)
+from repro import codecs as registry
 
 
 def main():

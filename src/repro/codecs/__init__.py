@@ -1,0 +1,33 @@
+"""repro.codecs — the single home for compression.
+
+Composable, jit-safe stages (`repro.codecs.stages`) assemble into the
+`TreeCodec` `(key, tree, budget)` convention (`repro.codecs.base`); the
+registry (`repro.codecs.registry`) names the assembled pipelines:
+
+    from repro import codecs
+
+    codec = codecs.make("ndsc", budget=1.5, chunk=128)
+    wire  = codec.encode(key, tree, round_idx)
+    tree2 = codec.decode(wire, codec.meta(tree))
+
+Wire codecs: `ndsc` (the paper's chunked near-democratic codec, fused
+Pallas encode), `ratq` (adaptive fixed-length baseline),
+`sparsify_then_embed` (top-k/rand-k survivors democratically embedded),
+`dsc` (dense per-leaf frames), `identity`. Simulation-only baselines:
+`sign`, `ternary`, `qsgd`, `naive`, `dither`, `topk`, `randk`.
+
+This package supersedes `repro.fed.registry` (now a deprecation shim).
+"""
+from repro.codecs import base, registry, stages
+from repro.codecs.base import TreeCodec, TreeMeta, total_dims, tree_meta
+from repro.codecs.registry import (available, codec_spec,
+                                   gradcomp_config_for_budget, make, register)
+from repro.codecs.stages import (Pack, Pipeline, Quantize, Sparsify,
+                                 Transform)
+
+__all__ = [
+    "Pack", "Pipeline", "Quantize", "Sparsify", "Transform", "TreeCodec",
+    "TreeMeta", "available", "base", "codec_spec",
+    "gradcomp_config_for_budget", "make", "register", "registry", "stages",
+    "total_dims", "tree_meta",
+]

@@ -1,0 +1,75 @@
+"""The `TreeCodec` convention — the one call surface every codec implements.
+
+A codec moves a parameter/gradient pytree onto the wire and back:
+
+    wire  = codec.encode(key, tree, round_idx)        # jit-safe pytree
+    meta  = codec.meta(tree)                          # static, host-side
+    tree' = codec.decode(wire, meta)                  # jit-safe
+    bits  = codec.wire_bits(tree)                     # analytic audit
+    bytes = codec.wire_bytes(wire, meta)              # realized ledger entry
+
+The fed engine, the dist consensus step and the figure scripts all program
+against this interface; `repro.codecs.stages` builds instances out of
+composable stages and `repro.codecs.registry` names them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+
+class TreeMeta:
+    """Static decode-side metadata for one tree template."""
+
+    def __init__(self, treedef, infos, extra=None):
+        self.treedef = treedef
+        self.infos = infos            # [(size, shape, dtype), ...]
+        self.extra = extra            # backend-specific (e.g. per-leaf stages)
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeCodec:
+    """The unified `(key, tree, budget) -> (payload, bits)` convention."""
+
+    name: str
+    encode: Callable      # (key, tree, round_idx=0) -> wire pytree (jit-safe)
+    decode: Callable      # (wire, meta) -> tree (jit-safe)
+    meta: Callable        # (tree template) -> TreeMeta (host-side, static)
+    wire_bits: Callable   # (tree template) -> float — analytic audit
+    wire_bytes: Callable  # (wire, meta) -> float — realized ledger entry
+    rate: Optional[float] = None   # effective bits/dim when well-defined
+    sim_only: bool = False         # True: `wire` is the decoded tree itself
+    spec: Optional[tuple] = None   # hashable identity: equal specs ⇒ the
+                                   # codecs are interchangeable (same factory,
+                                   # budget and kwargs) — the cohort-key unit
+    encode_ef: Optional[Callable] = None
+    # (key, tree, meta, round_idx=0) -> (wire, residual tree). Fused
+    # encode + error-feedback residual u − D(E(u)): same wire as `encode`
+    # under the same key, residual emitted without a separate decode pass
+    # (on TPU, without the decoded f32 tree round-tripping HBM). Backends
+    # without a fused path leave this None and the fed engine composes
+    # decode(encode(u)) itself.
+
+    def compress(self, key, tree, round_idx=0):
+        """One-shot (payload, analytic bits) — the ISSUE's convenience form."""
+        return self.encode(key, tree, round_idx), self.wire_bits(tree)
+
+
+def tree_meta(tree) -> tuple:
+    """(treedef, [(size, shape, dtype), ...]) of a tree template."""
+    leaves, treedef = jax.tree.flatten(tree)
+    return treedef, [(int(np.prod(x.shape)) if x.shape else 1,
+                      tuple(x.shape), x.dtype) for x in leaves]
+
+
+def total_dims(tree) -> int:
+    return sum(int(np.prod(x.shape)) if x.shape else 1
+               for x in jax.tree.leaves(tree))
+
+
+# the pre-move (repro.fed.registry) spellings, kept for the shim
+_tree_meta = tree_meta
+_total_dims = total_dims

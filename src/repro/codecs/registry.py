@@ -1,0 +1,387 @@
+"""Named codec factories over the stage pipelines: one registry, one call
+convention for every compressor in the repo.
+
+    codec = registry.make("ndsc", budget=1.5, chunk=128)
+    wire  = codec.encode(key, tree, round_idx)        # jit-safe pytree
+    meta  = codec.meta(tree)                          # static, host-side
+    tree' = codec.decode(wire, meta)                  # jit-safe
+    bits  = codec.wire_bits(tree)                     # analytic audit
+    bytes = codec.wire_bytes(wire, meta)              # realized ledger entry
+
+Budgets are bits per ORIGINAL model dimension. For the NDSC backend the
+budget maps onto `GradCompConfig` so that `effective_bits == budget` exactly
+(bits ∈ {1,2,4,8} plus a fractional chunk keep rate with `exact_keep`), which
+makes the realized ledger match the analytic audit to the byte. A budget may
+also be a per-leaf sequence (see `repro.fed.budget.split_leaf_budgets`).
+
+Wire codecs (`ndsc`, `ratq`, `sparsify_then_embed`) are stage pipelines from
+`repro.codecs.stages`; `core.baselines` compressors ride as single-stage
+simulation-only pipelines (the wire is the decoded tree); `dsc` binds the
+dense per-leaf frame `core.coding.Codec`. This module lived at
+`repro.fed.registry` before the codec stack was promoted to its own package —
+that path remains as a deprecation shim.
+"""
+from __future__ import annotations
+
+import dataclasses
+import difflib
+import inspect
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.codecs import stages
+from repro.codecs.base import (TreeCodec, TreeMeta, _tree_meta,  # noqa: F401
+                               _total_dims, tree_meta, total_dims)
+from repro.core import baselines as B
+from repro.core import frames as frames_lib
+from repro.core.coding import Codec, CodecConfig
+from repro.dist import gradcomp as G
+
+_REGISTRY: dict = {}
+
+
+def register(name: str):
+    def deco(factory):
+        _REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def available() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def _unknown_name_error(name) -> ValueError:
+    """List what IS registered and the nearest spelling, so a typo'd codec
+    name fails with the fix in the message."""
+    names = available()
+    close = difflib.get_close_matches(str(name), names, n=1)
+    hint = f"; did you mean {close[0]!r}?" if close else ""
+    return ValueError(f"unknown codec {name!r}{hint} "
+                      f"(available: {', '.join(names)})")
+
+
+def codec_spec(name: str, budget, kwargs: dict) -> tuple:
+    """The hashable identity of a `make` call.
+
+    Two codecs with equal specs encode/decode identically (factories are
+    deterministic in (name, budget, kwargs) — frames and keep-masks derive
+    from the seed, never from object identity), so `repro.fed.rounds` uses
+    the spec as its cohort key and shares one compiled vmapped program among
+    all clients whose codecs compare equal.
+
+    The kwargs are CANONICALIZED against the factory signature before they
+    enter the spec: `make("ndsc", 1.5)` and `make("ndsc", 1.5, chunk=128)`
+    build identical codecs, so they must land in one cohort — leaving the
+    caller's kwargs raw would split that cohort in two and compile every
+    vmapped round/decode program twice. Keywords a factory swallows through
+    `**_` stay as written (they don't have defaults to bind)."""
+    if name not in _REGISTRY:
+        raise _unknown_name_error(name)
+    sig = inspect.signature(_REGISTRY[name])
+    params = list(sig.parameters.values())
+    bound = sig.bind(budget, **kwargs)
+    bound.apply_defaults()
+    budget_val = bound.arguments[params[0].name]
+    items: dict = {}
+    for p in params[1:]:
+        if p.kind is inspect.Parameter.VAR_KEYWORD:
+            items.update(bound.arguments.get(p.name, {}))
+        else:
+            items[p.name] = bound.arguments[p.name]
+    budget_key = (float(budget_val) if np.isscalar(budget_val)
+                  else tuple(float(b) for b in budget_val))
+    return (name, budget_key, tuple(sorted(items.items())))
+
+
+_UNSET = object()
+
+
+def make(name, budget=_UNSET, **kwargs) -> TreeCodec:
+    """Instantiate a registered compressor at a bits-per-dimension budget.
+
+    Two call forms:
+
+      make("ndsc", 1.5, chunk=64)        # name + budget + kwargs
+      make(spec)                         # the canonical spec tuple
+
+    where `spec` is the hashable identity produced by `codec_spec(...)` (and
+    carried on every codec as `TreeCodec.spec`):
+
+      (name, budget, kwargs_items)
+        name          registered factory name, e.g. "ndsc"
+        budget        float bits/dim, or a tuple of per-leaf floats
+        kwargs_items  sorted ((key, value), ...) of the factory kwargs,
+                      canonicalized against the factory signature
+
+    The forms round-trip by spec equality — `make(c.spec).spec == c.spec`
+    for every codec `c` — so checkpoints, benchmarks and cohort keys can
+    rebuild a codec from its spec alone, without re-plumbing the original
+    kwargs. The spec form takes no extra arguments (they are already baked
+    into the tuple)."""
+    if isinstance(name, (tuple, list)):
+        if budget is not _UNSET or kwargs:
+            raise ValueError("make(spec) takes no extra arguments: the "
+                             "budget and kwargs are part of the spec")
+        try:
+            name, budget, items = name
+            kwargs = dict(items)
+        except (TypeError, ValueError):
+            raise ValueError(f"malformed codec spec {name!r}; expected "
+                             "(name, budget, kwargs_items) from codec_spec")
+        if isinstance(budget, tuple):       # per-leaf budgets
+            budget = list(budget)
+    elif budget is _UNSET:
+        budget = 4.0
+    if name not in _REGISTRY:
+        raise _unknown_name_error(name)
+    codec = _REGISTRY[name](budget, **kwargs)
+    return dataclasses.replace(codec, spec=codec_spec(name, budget, kwargs))
+
+
+# ---------------------------------------------------------------------------
+# identity — the no-compression reference (f32 wire)
+# ---------------------------------------------------------------------------
+@register("identity")
+def _identity(budget: float = 32.0, **_) -> TreeCodec:
+    def encode(key, tree, round_idx=0):
+        return jax.tree.map(lambda x: x.astype(jnp.float32), tree)
+
+    def decode(wire, meta):
+        return jax.tree.map(
+            lambda x, info: x.astype(info[2]), wire,
+            jax.tree.unflatten(meta.treedef, meta.infos))
+
+    def meta(tree):
+        treedef, infos = tree_meta(tree)
+        return TreeMeta(treedef, infos)
+
+    return TreeCodec(
+        "identity", encode, decode, meta,
+        wire_bits=lambda tree: 32.0 * total_dims(tree),
+        wire_bytes=lambda wire, meta: 4.0 * sum(i[0] for i in meta.infos),
+        rate=32.0)
+
+
+# ---------------------------------------------------------------------------
+# ndsc — the chunked Hadamard-frame pipeline (fused gradcomp stage impl)
+# ---------------------------------------------------------------------------
+def gradcomp_config_for_budget(budget: float, chunk: int = 128,
+                               dithered: bool = False, exact_keep: bool = True,
+                               seed: int = 0) -> G.GradCompConfig:
+    """Map a fractional bits/dim budget onto a GradCompConfig with
+    `effective_bits == budget`: the smallest packable word size that covers
+    the budget, with a chunk keep-fraction making up the fractional part."""
+    if not 0.0 < budget <= 8.0:
+        raise ValueError(f"ndsc budget must be in (0, 8], got {budget}")
+    bits = next(b for b in (1, 2, 4, 8) if b >= budget)
+    return G.GradCompConfig(
+        bits=bits, chunk=chunk, keep_fraction=min(budget / bits, 1.0),
+        exact_keep=exact_keep, dithered=dithered,
+        error_feedback=not dithered, seed=seed)
+
+
+def _chunked_pipeline(cfg: G.GradCompConfig,
+                      quantize_kind: Optional[str] = None,
+                      ladder: int = 16) -> stages.Pipeline:
+    """The stage-pipeline spelling of a GradCompConfig (+ quantizer choice)."""
+    if cfg.keep_fraction < 1.0:
+        sparsify = stages.Sparsify(
+            "chunk_drop", fraction=cfg.keep_fraction, exact=cfg.exact_keep,
+            rescale=cfg.dithered and not cfg.error_feedback)
+    else:
+        sparsify = stages.Sparsify("none")
+    kind = quantize_kind or ("dithered" if cfg.dithered else "uniform")
+    return stages.Pipeline(
+        transform=stages.Transform("hadamard", seed=cfg.seed),
+        sparsify=sparsify,
+        quantize=stages.Quantize(kind, bits=cfg.bits, ladder=ladder),
+        pack=stages.Pack("int32"), chunk=cfg.chunk)
+
+
+@register("ndsc")
+def _ndsc(budget, *, chunk: int = 128, dithered: bool = False,
+          exact_keep: bool = True, seed: int = 0) -> TreeCodec:
+    scalar = np.isscalar(budget)
+    budgets = None if scalar else list(budget)
+
+    def pipeline_for(b: float) -> stages.Pipeline:
+        return _chunked_pipeline(
+            gradcomp_config_for_budget(b, chunk, dithered, exact_keep, seed))
+
+    if scalar:
+        pipeline = pipeline_for(budget)
+        rate = gradcomp_config_for_budget(budget, chunk).effective_bits
+        return stages.tree_codec(f"ndsc(R={budget:g})", pipeline, rate=rate)
+    tag = f"ndsc(R per leaf={[round(float(b), 3) for b in budgets]})"
+    return stages.tree_codec(tag, [pipeline_for(b) for b in budgets])
+
+
+# ---------------------------------------------------------------------------
+# ratq — adaptive fixed-length quantizer baseline (Mayekar & Tyagi)
+# ---------------------------------------------------------------------------
+@register("ratq")
+def _ratq(budget, *, chunk: int = 128, ladder: int = 16,
+          exact_keep: bool = True, seed: int = 0) -> TreeCodec:
+    """RATQ at a bits/dim budget: same bits × keep-fraction split as ndsc,
+    but per-chunk scales come from a ⌈log2 ladder⌉-bit geometric rung index
+    instead of a 32-bit f32 — the adaptive fixed-length head-to-head."""
+    if not np.isscalar(budget):
+        raise ValueError("ratq takes a scalar bits/dim budget")
+    cfg = gradcomp_config_for_budget(float(budget), chunk,
+                                     exact_keep=exact_keep, seed=seed)
+    pipeline = _chunked_pipeline(cfg, quantize_kind="ratq", ladder=ladder)
+    return stages.tree_codec(f"ratq(R={budget:g},h={ladder})", pipeline,
+                             rate=cfg.effective_bits)
+
+
+# ---------------------------------------------------------------------------
+# sparsify_then_embed — top-k/rand-k survivors, democratically embedded
+# ---------------------------------------------------------------------------
+@register("sparsify_then_embed")
+def _sparsify_then_embed(budget, *, mode: str = "topk", bits: int = 4,
+                         chunk: int = 128, dithered: bool = False,
+                         k_fraction: Optional[float] = None,
+                         seed: int = 0) -> TreeCodec:
+    """The paper's sparsification extension: keep `k_fraction·n` coordinates
+    in original space (top-k by magnitude, or a shared random-k subset),
+    then NDSC-encode the survivors. Defaults spend `budget` bits per
+    original dim on quantized survivors (k = budget/bits · n), with the
+    log2 C(n,k) index cost charged on top — the identical convention to the
+    plain `topk`/`randk` baselines, so equal-bits comparisons are fair."""
+    if mode not in ("topk", "randk"):
+        raise ValueError(f"mode must be 'topk' or 'randk', got {mode!r}")
+    kf = min(1.0, float(budget) / bits) if k_fraction is None else k_fraction
+    kf = min(max(kf, 1e-4), 1.0)
+    pipeline = stages.Pipeline(
+        transform=stages.Transform("hadamard", seed=seed),
+        sparsify=stages.Sparsify(mode, fraction=kf),
+        quantize=stages.Quantize("dithered" if dithered else "uniform",
+                                 bits=bits),
+        pack=stages.Pack("int32"), chunk=chunk)
+    return stages.tree_codec(
+        f"sparsify_then_embed({mode},R={budget:g})", pipeline)
+
+
+# ---------------------------------------------------------------------------
+# dsc — the dense frame Codec from core.coding (per-leaf Hadamard frames)
+# ---------------------------------------------------------------------------
+@register("dsc")
+def _dsc(budget, *, dithered: bool = False, embedding: str = "near_democratic",
+         seed: int = 0) -> TreeCodec:
+    from repro.core.embeddings import EmbeddingSpec
+    codec_cache: dict = {}
+
+    def codec_for(leaf_idx: int, n: int) -> Codec:
+        k = (leaf_idx, n)
+        if k not in codec_cache:
+            key = jax.random.fold_in(jax.random.key(seed), leaf_idx)
+            frame = frames_lib.hadamard_frame(key, n)
+            codec_cache[k] = Codec(frame, CodecConfig(
+                bits_per_dim=float(budget), dithered=dithered,
+                embedding=EmbeddingSpec(kind=embedding)))
+        return codec_cache[k]
+
+    def encode(key, tree, round_idx=0):
+        leaves, treedef = jax.tree.flatten(tree)
+        outs = []
+        for i, x in enumerate(leaves):
+            c = codec_for(i, int(np.prod(x.shape)) if x.shape else 1)
+            kk = jax.random.fold_in(jax.random.fold_in(key, i), round_idx)
+            p = c.encode(x.astype(jnp.float32).reshape(-1), kk)
+            outs.append({"indices": p.indices, "scale": p.scale}
+                        | ({"mask": p.mask} if p.mask is not None else {}))
+        return jax.tree.unflatten(treedef, outs)
+
+    def meta(tree):
+        treedef, infos = tree_meta(tree)
+        return TreeMeta(treedef, infos)
+
+    def decode(wire, meta):
+        from repro.core.coding import Payload
+        plist = meta.treedef.flatten_up_to(wire)
+        outs = []
+        for i, (p, (size, shape, dtype)) in enumerate(
+                zip(plist, meta.infos)):
+            c = codec_for(i, size)
+            y = c.decode(Payload(p["indices"], p["scale"], p.get("mask")))
+            outs.append(y.reshape(shape).astype(dtype))
+        return jax.tree.unflatten(meta.treedef, outs)
+
+    def wire_bits(tree):
+        leaves, _ = jax.tree.flatten(tree)
+        return sum(
+            codec_for(i, int(np.prod(x.shape)) if x.shape else 1).wire_bits()
+            + 32.0 for i, x in enumerate(leaves))
+
+    def wire_bytes(wire, meta):
+        total = 0.0
+        for i, (p, (size, _, _)) in enumerate(
+                zip(meta.treedef.flatten_up_to(wire), meta.infos)):
+            c = codec_for(i, size)
+            per_idx = 1.0 if c.sublinear else math.log2(c.levels)
+            if "mask" in p:
+                # the keep mask is NOT charged: it comes from the shared
+                # PRNG key, so the decoder regenerates it (same convention
+                # as Codec.wire_bits, which counts kept coordinates only)
+                total += float(jnp.sum(p["mask"])) * per_idx / 8.0 + 4.0
+                continue
+            total += (c.N * per_idx) / 8.0 + 4.0
+        return total
+
+    return TreeCodec(f"dsc(R={budget:g})", encode, decode, meta,
+                     wire_bits, wire_bytes, rate=float(budget))
+
+
+# ---------------------------------------------------------------------------
+# core.baselines — simulation-only single-stage pipelines
+# ---------------------------------------------------------------------------
+@register("sign")
+def _sign(budget=1.0, *, scaled: bool = True, **_) -> TreeCodec:
+    return stages.sim_pipeline(B.sign_compressor(scaled))
+
+
+@register("ternary")
+def _ternary(budget=math.log2(3), **_) -> TreeCodec:
+    return stages.sim_pipeline(B.ternary())
+
+
+@register("qsgd")
+def _qsgd(budget=4.0, **_) -> TreeCodec:
+    # n(1 + log2(s+1)) + 32 bits: sign + stochastic level index per coord
+    s = max(1, int(round(2.0 ** (budget - 1.0) - 1.0)))
+    return stages.sim_pipeline(B.qsgd(s))
+
+
+@register("naive")
+def _naive(budget=4.0, **_) -> TreeCodec:
+    levels = max(2, int(round(2.0 ** budget)))
+    return stages.sim_pipeline(B.naive_uniform(levels))
+
+
+@register("dither")
+def _dither(budget=4.0, **_) -> TreeCodec:
+    levels = max(2, int(round(2.0 ** budget)))
+    return stages.sim_pipeline(B.standard_dither(levels))
+
+
+@register("topk")
+def _topk(budget=4.0, *, k_fraction: Optional[float] = None,
+          quant_levels: Optional[int] = 256, **_) -> TreeCodec:
+    per_val = 32.0 if quant_levels is None else math.log2(quant_levels)
+    kf = budget / per_val if k_fraction is None else k_fraction
+    return stages.sim_pipeline(B.topk(min(max(kf, 1e-4), 1.0), quant_levels))
+
+
+@register("randk")
+def _randk(budget=4.0, *, k_fraction: Optional[float] = None,
+           quant_levels: Optional[int] = 256, unbiased: bool = False,
+           **_) -> TreeCodec:
+    per_val = 32.0 if quant_levels is None else math.log2(quant_levels)
+    kf = budget / per_val if k_fraction is None else k_fraction
+    return stages.sim_pipeline(
+        B.randk(min(max(kf, 1e-4), 1.0), quant_levels, unbiased))

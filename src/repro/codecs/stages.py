@@ -1,0 +1,528 @@
+"""Composable, jit-safe codec stages and the `Pipeline` that assembles them.
+
+Every wire codec in this repo is four stages applied per leaf:
+
+    transform  ─►  sparsify  ─►  quantize  ─►  pack
+    hadamard       none          uniform       int32
+    identity       chunk_drop    dithered      none
+                   topk          ratq
+                   randk
+
+`Pipeline` composes one choice per stage into the `TreeCodec`
+`(key, tree, budget)` convention (see `repro.codecs.base`). Three leaf
+implementations back the supported stage combinations:
+
+  * **NDSC** (`hadamard` + `none`/`chunk_drop` + `uniform`/`dithered` +
+    `int32`): delegates to `repro.dist.gradcomp` — the chunked
+    sign-flip → FWHT → ℓ∞-scale → quantize → bit-pack chain that runs as one
+    fused Pallas kernel on TPU. Delegation (not reimplementation) is what
+    keeps the pipeline wire payloads BIT-IDENTICAL to the historical
+    gradcomp path and preserves the fused `encode_ef` residual.
+  * **RATQ** (`hadamard` + `none`/`chunk_drop` + `ratq` + `int32`): the
+    adaptive fixed-length quantizer of Mayekar & Tyagi — rotate, then pick
+    each chunk's dynamic range from a per-leaf geometric ladder
+    e_j = 2^(j−(h−1))·‖rot‖∞ and quantize at the chosen rung. The per-chunk
+    side information is ⌈log2 h⌉ bits (vs NDSC's 32-bit f32 scale); one f32
+    gain rides per leaf. All shapes are static, so sweeping round_idx never
+    recompiles.
+  * **sparsify-then-embed** (`hadamard` + `topk`/`randk` + `uniform`/
+    `dithered` + `int32`): the paper's sparsification extension — select
+    k survivors in ORIGINAL space, gather them into a dense length-k
+    vector, then democratically embed + quantize that vector (the Fig. 1d
+    recipe). Indices ride the wire; the audit charges log2 C(n,k) for them,
+    the same convention as the `core.baselines` top-k/rand-k compressors.
+
+Stochastic draws (dither, keep-masks, rand-k subsets) are pre-drawn from
+`fold_in`-derived keys OUTSIDE any kernel, so forcing the Pallas path can
+never change a payload. Analytic `wire_bits` and realized `wire_bytes` are
+computed from the same per-leaf formulas, so the fed ledger matches the
+audit to the byte for every deterministic-size codec.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.codecs import base
+from repro.codecs.base import TreeCodec, TreeMeta
+from repro.dist import gradcomp as G
+from repro.kernels import ops as kernel_ops
+
+TRANSFORMS = ("hadamard", "identity")
+SPARSIFIERS = ("none", "chunk_drop", "topk", "randk")
+QUANTIZERS = ("uniform", "dithered", "ratq")
+PACKERS = ("int32", "none")
+
+PACKABLE_BITS = (1, 2, 4, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class Transform:
+    """Per-chunk orthonormal rotation applied before quantization.
+
+    `hadamard` is the randomized frame S = D·H from `core.frames`: a pure
+    function of (seed, leaf index), so every worker builds the same frame
+    and payloads decode identically everywhere."""
+
+    kind: str = "hadamard"
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.kind not in TRANSFORMS:
+            raise ValueError(f"transform must be one of {TRANSFORMS}, "
+                             f"got {self.kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Sparsify:
+    """Which coordinates make it onto the wire.
+
+    `chunk_drop` subsamples whole chunks AFTER the transform (the paper's
+    sub-linear R < 1 regime; `exact` keeps exactly ⌈fraction·C⌉ chunks so
+    realized bytes equal the analytic audit). `topk` / `randk` select
+    `fraction·n` coordinates in ORIGINAL space BEFORE the transform and
+    compact the survivors — the sparsify-then-embed hybrid. `rescale`
+    divides the decode by `fraction` for unbiasedness (DQ-PSGD); error-
+    feedback paths stay contractive and leave it False."""
+
+    kind: str = "none"
+    fraction: float = 1.0
+    exact: bool = True
+    rescale: bool = False
+
+    def __post_init__(self):
+        if self.kind not in SPARSIFIERS:
+            raise ValueError(f"sparsify must be one of {SPARSIFIERS}, "
+                             f"got {self.kind!r}")
+        if not 0.0 < self.fraction <= 1.0:
+            raise ValueError(
+                f"sparsify fraction must be in (0, 1], got {self.fraction}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Quantize:
+    """Scalar quantizer for the (transformed, surviving) coordinates.
+
+    `uniform` / `dithered` use one f32 ℓ∞ scale per chunk; `ratq` replaces
+    it with a ⌈log2 ladder⌉-bit index into a geometric range ladder shared
+    with the decoder, plus one f32 gain per leaf."""
+
+    kind: str = "uniform"
+    bits: int = 4
+    ladder: int = 16              # ratq: number of geometric range rungs h
+
+    def __post_init__(self):
+        if self.kind not in QUANTIZERS:
+            raise ValueError(f"quantize must be one of {QUANTIZERS}, "
+                             f"got {self.kind!r}")
+        if self.bits not in PACKABLE_BITS:
+            raise ValueError(
+                f"bits must be in {PACKABLE_BITS} (int32 packing), "
+                f"got {self.bits}")
+        if self.kind == "ratq" and self.ladder < 2:
+            raise ValueError(f"ratq ladder needs ≥ 2 rungs, got {self.ladder}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Pack:
+    """Wire representation of the quantized indices."""
+
+    kind: str = "int32"
+
+    def __post_init__(self):
+        if self.kind not in PACKERS:
+            raise ValueError(f"pack must be one of {PACKERS}, "
+                             f"got {self.kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Pipeline:
+    """One choice per stage + the chunk length, composed into a TreeCodec.
+
+    Frozen and hashable: a Pipeline is a value, and `tree_codec` built from
+    equal pipelines encode/decode identically (all randomness derives from
+    seeds and keys, never object identity)."""
+
+    transform: Transform = Transform()
+    sparsify: Sparsify = Sparsify()
+    quantize: Quantize = Quantize()
+    pack: Pack = Pack()
+    chunk: int = 128
+
+    def leaf(self):
+        """The per-leaf stage codec implementing this combination."""
+        return _leaf_codec(self)
+
+    def tree_codec(self, name: str, rate: Optional[float] = None) -> TreeCodec:
+        return tree_codec(name, self, rate=rate)
+
+
+# ---------------------------------------------------------------------------
+# Pipeline -> leaf-codec dispatch
+# ---------------------------------------------------------------------------
+def _gradcomp_config(p: Pipeline) -> G.GradCompConfig:
+    """The GradCompConfig equivalent of a chunked pipeline.
+
+    gradcomp folds the decode-side unbiased rescale into
+    `dithered and not error_feedback`, so `error_feedback` here is just the
+    inverse of the sparsify stage's `rescale` flag."""
+    drop = p.sparsify.kind == "chunk_drop"
+    dithered = p.quantize.kind == "dithered"
+    return G.GradCompConfig(
+        bits=p.quantize.bits, chunk=p.chunk,
+        keep_fraction=p.sparsify.fraction if drop else 1.0,
+        exact_keep=p.sparsify.exact if drop else False,
+        dithered=dithered,
+        error_feedback=not (p.sparsify.rescale and dithered and drop),
+        seed=p.transform.seed)
+
+
+@functools.lru_cache(maxsize=None)
+def _leaf_codec(p: Pipeline):
+    if p.sparsify.kind in ("topk", "randk"):
+        if (p.transform.kind, p.quantize.kind, p.pack.kind) not in (
+                ("hadamard", "uniform", "int32"),
+                ("hadamard", "dithered", "int32")):
+            raise ValueError(
+                "topk/randk sparsify composes with transform='hadamard', "
+                "quantize='uniform'|'dithered', pack='int32' "
+                "(sparsify-then-embed); got "
+                f"{p.transform.kind}/{p.quantize.kind}/{p.pack.kind}")
+        return SparsifyEmbedLeaf(_gradcomp_config(p), p.sparsify.kind,
+                                 p.sparsify.fraction)
+    if p.transform.kind != "hadamard" or p.pack.kind != "int32":
+        raise ValueError(
+            "chunked pipelines need transform='hadamard' and pack='int32' "
+            f"(got {p.transform.kind}/{p.pack.kind}); identity-transform "
+            "baselines are built with `sim_pipeline`")
+    if p.quantize.kind == "ratq":
+        return RatqLeaf(_gradcomp_config(p), p.quantize.ladder)
+    return NdscLeaf(_gradcomp_config(p))
+
+
+# ---------------------------------------------------------------------------
+# NDSC: delegate to repro.dist.gradcomp (the fused-kernel stage impl)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class NdscLeaf:
+    """hadamard + (chunk_drop) + uniform/dithered + int32.
+
+    Thin delegation to `repro.dist.gradcomp` — the chain runs as ONE fused
+    Pallas kernel on the TPU dispatch path and its payloads are bit-exact
+    with the historical gradcomp/registry encode by construction."""
+
+    cfg: G.GradCompConfig
+    fused_ef = True               # encode_ef emits the residual in-tile
+
+    @property
+    def effective_bits(self) -> float:
+        return self.cfg.effective_bits
+
+    def encode(self, x, leaf_idx, round_idx=0, key=None):
+        return G.encode_leaf(x, leaf_idx, self.cfg, round_idx, key=key)
+
+    def encode_ef(self, x, leaf_idx, round_idx=0, key=None,
+                  residual_dtype=None):
+        return G.encode_leaf_ef(x, leaf_idx, self.cfg, round_idx, key=key,
+                                residual_dtype=residual_dtype)
+
+    def decode(self, payload, leaf_idx, size, shape, dtype, extra_lead=0):
+        return G.decode_leaf(payload, leaf_idx, size, shape, dtype, self.cfg,
+                             extra_lead=extra_lead)
+
+    def wire_bits(self, size: int) -> float:
+        template = jax.ShapeDtypeStruct((int(size),), jnp.float32)
+        return G.wire_bytes_tree([template], self.cfg)["payload_bytes"] * 8.0
+
+    def wire_bytes(self, payload, size: int) -> float:
+        return G.wire_bytes_payload(payload, self.cfg)
+
+
+def ndsc_leaf(cfg: G.GradCompConfig) -> NdscLeaf:
+    """The NDSC stage codec for an explicit GradCompConfig (what
+    `repro.dist.step` routes its consensus encode/decode through)."""
+    return NdscLeaf(cfg)
+
+
+# ---------------------------------------------------------------------------
+# RATQ: rotate + adaptive geometric range + fixed-length quantize
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RatqLeaf:
+    """hadamard + (chunk_drop) + ratq + int32 (Mayekar & Tyagi).
+
+    Per leaf: rotate chunk-wise, take one f32 gain = ‖rot‖∞ over the leaf,
+    then give each chunk the smallest ladder rung e_j = 2^(j−(h−1)) ≥
+    ‖row‖∞/gain and quantize the row at scale gain·e_j. The wire carries
+    the packed words, the ⌈log2 h⌉-bit rung index per chunk and the gain —
+    fixed length, so round_idx sweeps never change a shape."""
+
+    cfg: G.GradCompConfig         # bits/chunk/keep_fraction/exact_keep/seed
+    ladder: int
+    fused_ef = False
+
+    @property
+    def _ridx_bits(self) -> int:
+        return max(1, math.ceil(math.log2(self.ladder)))
+
+    def _scales(self, ridx, gain):
+        safe = jnp.maximum(gain, jnp.finfo(jnp.float32).tiny)
+        return safe * jnp.exp2((ridx - (self.ladder - 1)).astype(jnp.float32))
+
+    def encode(self, x, leaf_idx, round_idx=0, key=None):
+        cfg = self.cfg
+        chunks = G._to_chunks(x, cfg.chunk)
+        signs = G._frame_signs(leaf_idx, cfg).astype(jnp.float32)
+        _, mask = G._leaf_draws(leaf_idx, chunks.shape[0], chunks.shape[0],
+                                cfg, round_idx, key)
+        rot = kernel_ops.rotate(chunks, signs)
+        gain = jnp.max(jnp.abs(rot)).reshape(1, 1)
+        safe = jnp.maximum(gain, jnp.finfo(jnp.float32).tiny)
+        rel = jnp.max(jnp.abs(rot), axis=-1, keepdims=True) / safe  # ∈ [0, 1]
+        floor = 2.0 ** (1 - self.ladder)                  # the lowest rung
+        ridx = jnp.clip(
+            jnp.ceil(jnp.log2(jnp.maximum(rel, floor))).astype(jnp.int32)
+            + (self.ladder - 1), 0, self.ladder - 1)
+        words = kernel_ops.quantize_pack(rot, self._scales(ridx, gain),
+                                         cfg.bits)
+        if mask is not None:
+            # dropped chunks emit all-zero words + rung 0: no ghost info
+            words = words * mask.astype(words.dtype)
+            ridx = ridx * mask.astype(ridx.dtype)
+        payload = {"words": words, "ridx": ridx, "gain": gain}
+        if mask is not None:
+            payload["mask"] = mask
+        return payload
+
+    def decode(self, payload, leaf_idx, size, shape, dtype, extra_lead=0):
+        cfg = self.cfg
+        words = payload["words"]
+        scale = self._scales(payload["ridx"], payload["gain"])
+        x_hat = kernel_ops.unpack_dequant(words, scale, cfg.bits, cfg.chunk)
+        mask = payload.get("mask")
+        if mask is not None:
+            x_hat = x_hat * mask
+            if cfg.dithered and not cfg.error_feedback:
+                x_hat = x_hat / cfg.keep_fraction
+        signs = G._frame_signs(leaf_idx, cfg).astype(x_hat.dtype)
+        y = kernel_ops.unrotate(x_hat, signs)
+        lead = tuple(words.shape[:extra_lead])
+        flat = y.reshape(lead + (-1,))[..., :size]
+        return flat.reshape(lead + tuple(shape)).astype(dtype)
+
+    def _leaf_bytes(self, c: int, kept) -> float:
+        per_chunk = (self.cfg.chunk * self.cfg.bits + self._ridx_bits) / 8.0
+        total = kept * per_chunk + 4.0                    # + the f32 gain
+        if self.cfg.keep_fraction < 1.0:
+            total += (c + 7) // 8                         # the keep mask
+        return total
+
+    def wire_bits(self, size: int) -> float:
+        c = -(-int(size) // self.cfg.chunk)
+        if self.cfg.keep_fraction >= 1.0:
+            kept = c
+        elif self.cfg.exact_keep:
+            kept = self.cfg.kept_chunks(c)
+        else:
+            kept = self.cfg.keep_fraction * c
+        return self._leaf_bytes(c, kept) * 8.0
+
+    def wire_bytes(self, payload, size: int) -> float:
+        c = payload["ridx"].shape[-2]
+        mask = payload.get("mask")
+        kept = c if mask is None else float(jnp.sum(mask))
+        return self._leaf_bytes(c, kept)
+
+
+def _log2_comb(n: int, k: int) -> float:
+    """log2 C(n,k) — exact for small n (matching `core.baselines`), Stirling
+    via lgamma past the point where the exact big-int gets expensive."""
+    if n <= 65536:
+        return math.log2(math.comb(n, k))
+    lg = (math.lgamma(n + 1) - math.lgamma(k + 1) - math.lgamma(n - k + 1))
+    return lg / math.log(2.0)
+
+
+# ---------------------------------------------------------------------------
+# sparsify-then-embed: original-space selection, embedded-space quantization
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SparsifyEmbedLeaf:
+    """topk/randk + hadamard + uniform/dithered + int32 (paper Fig. 1d).
+
+    Selection happens in ORIGINAL space; the k survivors are gathered into
+    a dense length-k vector and NDSC-encoded (rotate, ℓ∞ scale, quantize,
+    pack), flattening the survivors' dynamic range so coarse bits suffice.
+    Indices ride the wire; the audit charges log2 C(n,k) for them — the
+    same convention as `core.baselines.topk`/`randk`, so equal-total-bits
+    comparisons against plain sparsification are apples-to-apples."""
+
+    cfg: G.GradCompConfig         # bits/chunk/dithered/seed (keep = 1)
+    mode: str                     # "topk" | "randk"
+    fraction: float
+    fused_ef = False
+
+    def _k(self, size: int) -> int:
+        return max(1, min(int(size), int(round(self.fraction * size))))
+
+    def encode(self, x, leaf_idx, round_idx=0, key=None):
+        cfg = self.cfg
+        flat = x.astype(jnp.float32).reshape(-1)
+        n, k = flat.size, self._k(x.size)
+        if self.mode == "topk":
+            idx = jnp.sort(jax.lax.top_k(jnp.abs(flat), k)[1])
+        else:
+            if key is None:
+                key = G._stoch_key(leaf_idx, round_idx, cfg)
+            draw = jax.random.uniform(jax.random.fold_in(key, 3), (n,))
+            # rank trick: exactly k survivors, ties broken by index —
+            # identical on every worker (cf. gradcomp._exact_keep_mask)
+            idx = jnp.sort(jnp.argsort(draw)[:k])
+        vals = flat[idx]
+        chunks = G._to_chunks(vals, cfg.chunk)
+        signs = G._frame_signs(leaf_idx, cfg).astype(jnp.float32)
+        dither, _ = G._leaf_draws(leaf_idx, chunks.shape[0], chunks.shape[0],
+                                  cfg, round_idx, key)
+        words, scale = kernel_ops.encode(chunks, signs, cfg.bits,
+                                         dither=dither, mask=None)
+        return {"indices": idx.astype(jnp.int32), "words": words,
+                "scale": scale}
+
+    def decode(self, payload, leaf_idx, size, shape, dtype, extra_lead=0):
+        if extra_lead:
+            raise ValueError("sparsify_then_embed does not decode stacked "
+                             "payloads (extra_lead > 0)")
+        cfg = self.cfg
+        idx = payload["indices"]
+        x_hat = kernel_ops.unpack_dequant(payload["words"], payload["scale"],
+                                          cfg.bits, cfg.chunk)
+        signs = G._frame_signs(leaf_idx, cfg).astype(x_hat.dtype)
+        vals = kernel_ops.unrotate(x_hat, signs).reshape(-1)[:idx.shape[-1]]
+        flat = jnp.zeros((size,), jnp.float32).at[idx].set(vals)
+        return flat.reshape(shape).astype(dtype)
+
+    def wire_bits(self, size: int) -> float:
+        n = int(size)
+        k = self._k(n)
+        c = -(-k // self.cfg.chunk)
+        payload_bits = c * (self.cfg.chunk * self.cfg.bits + 32)
+        return payload_bits + _log2_comb(n, k)
+
+    def wire_bytes(self, payload, size: int) -> float:
+        return self.wire_bits(size) / 8.0        # fixed-size wire, realized
+                                                 # == analytic every round
+
+
+# ---------------------------------------------------------------------------
+# tree assembly: per-leaf stage codecs -> the TreeCodec convention
+# ---------------------------------------------------------------------------
+def tree_codec(name: str, pipeline, rate: Optional[float] = None,
+               fused_ef: bool = True) -> TreeCodec:
+    """Assemble a Pipeline (or one Pipeline per leaf) into a TreeCodec.
+
+    Per-leaf keys fold in the leaf index; `meta.extra` carries the per-leaf
+    stage codecs so decode/audit never re-derive them. When every leaf
+    supports the fused encode+EF path (NDSC) the codec exposes `encode_ef`,
+    otherwise the fed engine composes decode(encode(u)) itself."""
+    shared = isinstance(pipeline, Pipeline)
+    pipes = None if shared else list(pipeline)
+
+    def leaves_for(n: int) -> list:
+        if shared:
+            return [pipeline.leaf()] * n
+        if len(pipes) != n:
+            raise ValueError(f"{len(pipes)} per-leaf pipelines for "
+                             f"{n} leaves")
+        return [p.leaf() for p in pipes]
+
+    def encode(key, tree, round_idx=0):
+        leaves, treedef = jax.tree.flatten(tree)
+        lcs = leaves_for(len(leaves))
+        payloads = [lc.encode(x, i, round_idx,
+                              key=jax.random.fold_in(key, i))
+                    for i, (x, lc) in enumerate(zip(leaves, lcs))]
+        return jax.tree.unflatten(treedef, payloads)
+
+    def meta(tree):
+        treedef, infos = base.tree_meta(tree)
+        return TreeMeta(treedef, infos, extra=leaves_for(len(infos)))
+
+    def decode(wire, meta):
+        plist = meta.treedef.flatten_up_to(wire)
+        outs = [lc.decode(p, i, size, shape, dtype)
+                for i, (p, (size, shape, dtype), lc) in
+                enumerate(zip(plist, meta.infos, meta.extra))]
+        return jax.tree.unflatten(meta.treedef, outs)
+
+    def wire_bits(tree):
+        leaves, _ = jax.tree.flatten(tree)
+        lcs = leaves_for(len(leaves))
+        return sum(lc.wire_bits(int(np.prod(x.shape)) if x.shape else 1)
+                   for x, lc in zip(leaves, lcs))
+
+    def wire_bytes(wire, meta):
+        plist = meta.treedef.flatten_up_to(wire)
+        return sum(lc.wire_bytes(p, info[0])
+                   for p, info, lc in zip(plist, meta.infos, meta.extra))
+
+    encode_ef = None
+    probe = leaves_for(len(pipes) if pipes else 1)
+    if fused_ef and all(lc.fused_ef for lc in probe):
+        def encode_ef(key, tree, meta, round_idx=0):
+            leaves = meta.treedef.flatten_up_to(tree)
+            pairs = [lc.encode_ef(x, i, round_idx,
+                                  key=jax.random.fold_in(key, i),
+                                  residual_dtype=info[2])
+                     for i, (x, lc, info) in
+                     enumerate(zip(leaves, meta.extra, meta.infos))]
+            wire = jax.tree.unflatten(meta.treedef, [p for p, _ in pairs])
+            resid = jax.tree.unflatten(meta.treedef, [r for _, r in pairs])
+            return wire, resid
+
+    return TreeCodec(name, encode, decode, meta, wire_bits, wire_bytes,
+                     rate=rate, encode_ef=encode_ef)
+
+
+# ---------------------------------------------------------------------------
+# simulation-only wrapper: core.baselines compressors as one-stage pipelines
+# ---------------------------------------------------------------------------
+def sim_pipeline(comp) -> TreeCodec:
+    """A `core.baselines.Compressor` as a degenerate single-stage pipeline
+    (identity transform, quantize-only, no pack): the wire is the decoded
+    tree itself (`sim_only=True`), with the compressor's analytic bits as
+    both audit and ledger."""
+
+    def encode(key, tree, round_idx=0):
+        leaves, treedef = jax.tree.flatten(tree)
+        outs = []
+        for i, x in enumerate(leaves):
+            kk = jax.random.fold_in(jax.random.fold_in(key, i), round_idx)
+            flat = x.astype(jnp.float32).reshape(-1)
+            outs.append(comp.roundtrip(kk, flat))
+        return jax.tree.unflatten(treedef, outs)
+
+    def meta(tree):
+        treedef, infos = base.tree_meta(tree)
+        return TreeMeta(treedef, infos)
+
+    def decode(wire, meta):
+        return jax.tree.unflatten(meta.treedef, [
+            y.reshape(shape).astype(dtype)
+            for y, (_, shape, dtype) in
+            zip(meta.treedef.flatten_up_to(wire), meta.infos)])
+
+    def wire_bits(tree):
+        return sum(comp.wire_bits(int(np.prod(x.shape)) if x.shape else 1)
+                   for x in jax.tree.leaves(tree))
+
+    def wire_bytes(wire, meta):
+        return sum(comp.wire_bits(size) for size, _, _ in meta.infos) / 8.0
+
+    return TreeCodec(comp.name, encode, decode, meta, wire_bits, wire_bytes,
+                     sim_only=True)

@@ -1,5 +1,12 @@
-"""Chunked NDSC gradient codec for the distributed consensus (paper §3 at
-model scale).
+"""Chunked NDSC gradient codec — the fused stage implementation behind the
+`repro.codecs` NDSC pipeline (paper §3 at model scale).
+
+This module IS the `hadamard + chunk_drop + uniform/dithered + int32`
+combination of `repro.codecs.stages`: the Pipeline delegates its leaf
+encode/decode (and the fused encode+EF residual) here rather than
+re-composing the stages, which is what keeps registry-built NDSC codecs
+bit-identical with the historical gradcomp path and keeps the whole chain
+on the single fused Pallas kernel.
 
 Each parameter leaf is flattened, zero-padded to a multiple of `chunk`
 (a power of two) and embedded chunk-wise with a randomized Hadamard frame
@@ -266,7 +273,7 @@ def decode_leaf(payload: dict, leaf_idx: int, size: int, shape, dtype,
             # contractive, so it never rescales (see core.coding).
             x_hat = x_hat / cfg.keep_fraction
     signs = _frame_signs(leaf_idx, cfg).astype(x_hat.dtype)
-    y = kernel_ops.fwht(x_hat) * signs                       # y = D·H·x̂
+    y = kernel_ops.unrotate(x_hat, signs)                    # y = D·H·x̂
     lead = tuple(words.shape[:extra_lead])
     flat = y.reshape(lead + (-1,))[..., :size]
     return flat.reshape(lead + tuple(shape)).astype(dtype)

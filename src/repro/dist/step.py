@@ -44,6 +44,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.codecs import stages as codec_stages
 from repro.dist import gradcomp as G
 from repro.dist import zero as zero_lib
 from repro.dist.sharding import (data_axes_for, data_axis_names, num_workers,
@@ -125,10 +126,16 @@ def _with_obs(fn, name: str, gc: G.GradCompConfig, payload_bytes):
 # Consensus
 # ---------------------------------------------------------------------------
 def _consensus(grads, ef, gc: G.GradCompConfig, axes, round_idx):
-    """Returns (consensus grads, new EF state)."""
+    """Returns (consensus grads, new EF state).
+
+    The per-leaf encode/decode routes through the NDSC stage codec from
+    `repro.codecs.stages` — the same fused-kernel gradcomp implementation
+    the fed engine and the registry use, so wire payloads here stay
+    bit-identical with every other consumer of the codec stack."""
     if gc.strategy == "psum":
         return jax.tree.map(lambda g: jax.lax.pmean(g, axes), grads), ef
 
+    leaf_codec = codec_stages.ndsc_leaf(gc)
     leaves, treedef = jax.tree.flatten(grads)
     e_leaves = treedef.flatten_up_to(ef) if gc.uses_ef else [None] * len(leaves)
     outs, new_e = [], []
@@ -138,23 +145,23 @@ def _consensus(grads, ef, gc: G.GradCompConfig, axes, round_idx):
         if gc.strategy == "allgather_packed" and gc.uses_ef:
             # fused encode + EF: the kernel decodes its own payload in-tile
             # and emits u − D(E(u)) alongside — no second decode pass
-            payload, resid = G.encode_leaf_ef(u, i, gc, round_idx)
+            payload, resid = leaf_codec.encode_ef(u, i, round_idx)
         else:
-            payload = G.encode_leaf(u, i, gc, round_idx)
+            payload = leaf_codec.encode(u, i, round_idx)
         if gc.strategy == "psum_decoded":
             # the consensus itself needs the decoded leaf here, so EF
             # reuses it (u − (u − d) ≠ d in floats, so the fused residual
             # can't substitute)
-            d_own = G.decode_leaf(payload, i, u.size, u.shape, jnp.float32,
-                                  gc)
+            d_own = leaf_codec.decode(payload, i, u.size, u.shape,
+                                      jnp.float32)
             cons = jax.lax.pmean(d_own, axes)
             if gc.uses_ef:
                 resid = u - d_own
         else:  # allgather_packed
             gathered = jax.tree.map(
                 lambda t: jax.lax.all_gather(t, axes, axis=0), payload)
-            stacked = G.decode_leaf(gathered, i, u.size, u.shape,
-                                    jnp.float32, gc, extra_lead=1)
+            stacked = leaf_codec.decode(gathered, i, u.size, u.shape,
+                                        jnp.float32, extra_lead=1)
             cons = jnp.mean(stacked, axis=0)
         outs.append(cons.astype(g.dtype))
         if gc.uses_ef:

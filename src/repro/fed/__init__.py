@@ -7,13 +7,17 @@ Large-m simulations run cohort-vectorized: clients sharing a
 (codec spec, client config, data signature) execute as one vmapped program,
 and budgets can re-allocate adaptively from the server-side delta-norm EMA.
 
-    from repro.fed import (Federation, FedConfig, ClientConfig, ServerConfig,
-                           registry, budget)
+    from repro import codecs
+    from repro.fed import Federation, FedConfig, ClientConfig, ServerConfig
 
-    codec = registry.make("ndsc", budget=2.0, chunk=128)
+    codec = codecs.make("ndsc", budget=2.0, chunk=128)
     fed = Federation(loss_fn, params, shards, codec)
     history = fed.run(FedConfig(num_rounds=50), eval_fn=global_loss)
+
+(`repro.fed.registry` is a deprecation shim for the codec registry's old
+home; new code imports from `repro.codecs`.)
 """
+from repro.codecs import TreeCodec, available, codec_spec, make
 from repro.fed import budget, registry
 from repro.fed.budget import AdaptiveConfig, NormEMA
 from repro.fed.clients import (ClientConfig, ClientState, concat_stacks,
@@ -22,7 +26,6 @@ from repro.fed.clients import (ClientConfig, ClientState, concat_stacks,
                                stack_padded, stack_trees, unstack_tree)
 from repro.fed.mesh import (aggregate_stacked_mesh, default_mesh,
                             make_mesh_cohort_round, mesh_weighted_mean)
-from repro.fed.registry import TreeCodec, available, codec_spec, make
 from repro.fed.rounds import (BACKENDS, FedConfig, Federation, cohort_key,
                               partition_cohorts)
 from repro.fed.server import (AGGREGATORS, SUM_MODES, ServerConfig,

@@ -17,7 +17,7 @@ norms get more bits. Three policies:
                      (exactly minimizes the distortion model above)
 
 All policies conserve the total budget to float precision and respect
-[min_rate, max_rate] per-client bounds. `repro.fed.registry` turns each R_i
+[min_rate, max_rate] per-client bounds. `repro.codecs` turns each R_i
 into a concrete `GradCompConfig` whose `effective_bits` equals R_i — that
 property is the audit unit tying the allocation to the bytes on the wire.
 

@@ -7,7 +7,7 @@ round counter. One federated round on client i:
     local   ← local_steps of SGD on the client's shard from params
     Δ_i     ← local − params                      (the params-delta)
     u_i     ← Δ_i + e_i                           (error compensation)
-    wire    ← E_i(u_i)          at budget R_i     (registry.TreeCodec)
+    wire    ← E_i(u_i)          at budget R_i     (repro.codecs TreeCodec)
     e_i     ← u_i − D_i(wire)                     (memory for next round)
 
 When the codec provides a fused `encode_ef` (the ndsc backend does, via the
@@ -114,7 +114,7 @@ def make_client_round(loss_fn: Callable, codec, cfg: ClientConfig,
                       params_template) -> Callable:
     """jit'd (global_params, data, state, round_idx) → (wire, new state).
 
-    `codec` is a registry.TreeCodec; its static meta is taken once from
+    `codec` is a `repro.codecs.TreeCodec`; its static meta is taken once from
     `params_template` so the returned function is a pure jit-able closure.
     The wire payload is what the server decodes; the client decodes its OWN
     payload locally for the error-feedback update (no extra communication,

@@ -21,7 +21,10 @@ Lane placement contract:
     same `clients._round_body` vmapped per shard — including the fused
     `codec.encode_ef` path (one `kernels.quantencode` pass per leaf emits
     wire + EF residual together) — so wires, EF states, decoded deltas and
-    norms agree bit for bit (regression-tested).
+    norms agree bit for bit (regression-tested). Any `repro.codecs`
+    TreeCodec rides this path, including the sub-linear R < 1 regime
+    (exact-keep chunk drop), whose realized ledger the mesh round reports
+    byte-equal to the analytic audit.
 
 Server reduce contract (`ServerConfig.sum_mode`, same words as PR 4):
 

@@ -1,443 +1,36 @@
-"""Unified tree-compressor registry: one call convention for every codec.
+"""Deprecated shim — the codec registry moved to `repro.codecs`.
 
-The repo grew three incompatible compressor call conventions:
+The unified compressor registry grew out of the fed engine but is consumed
+by the dist consensus step, the benchmarks and the figure scripts alike, so
+it was promoted to its own package:
 
-  * `core.baselines.Compressor`   — (key, y) -> y_hat roundtrips + analytic
-                                    `wire_bits(n)` (simulation-only wire),
-  * `core.coding.Codec`           — frame-bound (encode, decode) pairs with a
-                                    `Payload` wire format,
-  * `repro.dist.gradcomp`         — the chunked NDSC codec with packed int32
-                                    words and the `wire_bytes_tree` audit.
+    repro.fed.registry.make(...)   ->   repro.codecs.make(...)
+    repro.fed.registry.<anything>  ->   repro.codecs.registry.<anything>
 
-This module wraps all three behind one `TreeCodec` interface so the fed
-engine, the dist consensus benchmarks and the figure scripts stop
-hand-rolling adapters:
-
-    codec = registry.make("ndsc", budget=1.5, chunk=128)
-    wire  = codec.encode(key, tree, round_idx)        # jit-safe pytree
-    meta  = codec.meta(tree)                          # static, host-side
-    tree' = codec.decode(wire, meta)                  # jit-safe
-    bits  = codec.wire_bits(tree)                     # analytic audit
-    bytes = codec.wire_bytes(wire, meta)              # realized ledger entry
-
-Budgets are bits per ORIGINAL model dimension. For the NDSC backend the
-budget maps onto `GradCompConfig` so that `effective_bits == budget` exactly
-(bits ∈ {1,2,4,8} plus a fractional chunk keep rate with `exact_keep`), which
-makes the realized ledger match the analytic audit to the byte. A budget may
-also be a per-leaf sequence (see `repro.fed.budget.split_leaf_budgets`).
+This module stays importable (warning-free — CI guards that) for one
+release so existing imports keep working; only calling `make()` through it
+emits a DeprecationWarning. Everything else re-exports the real thing, so
+`from repro.fed.registry import TreeCodec, codec_spec, ...` is identical to
+importing from `repro.codecs`.
 """
 from __future__ import annotations
 
-import dataclasses
-import inspect
-import math
-from typing import Callable, Optional
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import baselines as B
-from repro.core import frames as frames_lib
-from repro.core.coding import Codec, CodecConfig
-from repro.dist import gradcomp as G
-
-
-class TreeMeta:
-    """Static decode-side metadata for one tree template."""
-
-    def __init__(self, treedef, infos, extra=None):
-        self.treedef = treedef
-        self.infos = infos            # [(size, shape, dtype), ...]
-        self.extra = extra            # backend-specific (e.g. per-leaf cfgs)
-
-
-@dataclasses.dataclass(frozen=True)
-class TreeCodec:
-    """The unified `(key, tree, budget) -> (payload, bits)` convention."""
-
-    name: str
-    encode: Callable      # (key, tree, round_idx=0) -> wire pytree (jit-safe)
-    decode: Callable      # (wire, meta) -> tree (jit-safe)
-    meta: Callable        # (tree template) -> TreeMeta (host-side, static)
-    wire_bits: Callable   # (tree template) -> float — analytic audit
-    wire_bytes: Callable  # (wire, meta) -> float — realized ledger entry
-    rate: Optional[float] = None   # effective bits/dim when well-defined
-    sim_only: bool = False         # True: `wire` is the decoded tree itself
-    spec: Optional[tuple] = None   # hashable identity: equal specs ⇒ the
-                                   # codecs are interchangeable (same factory,
-                                   # budget and kwargs) — the cohort-key unit
-    encode_ef: Optional[Callable] = None
-    # (key, tree, meta, round_idx=0) -> (wire, residual tree). Fused
-    # encode + error-feedback residual u − D(E(u)): same wire as `encode`
-    # under the same key, residual emitted without a separate decode pass
-    # (on TPU, without the decoded f32 tree round-tripping HBM). Backends
-    # without a fused path leave this None and the fed engine composes
-    # decode(encode(u)) itself.
-
-    def compress(self, key, tree, round_idx=0):
-        """One-shot (payload, analytic bits) — the ISSUE's convenience form."""
-        return self.encode(key, tree, round_idx), self.wire_bits(tree)
-
-
-_REGISTRY: dict[str, Callable] = {}
-
-
-def register(name: str):
-    def deco(factory):
-        _REGISTRY[name] = factory
-        return factory
-    return deco
-
-
-def available() -> tuple:
-    return tuple(sorted(_REGISTRY))
-
-
-def codec_spec(name: str, budget, kwargs: dict) -> tuple:
-    """The hashable identity of a `make` call.
-
-    Two codecs with equal specs encode/decode identically (factories are
-    deterministic in (name, budget, kwargs) — frames and keep-masks derive
-    from the seed, never from object identity), so `repro.fed.rounds` uses
-    the spec as its cohort key and shares one compiled vmapped program among
-    all clients whose codecs compare equal.
-
-    The kwargs are CANONICALIZED against the factory signature before they
-    enter the spec: `make("ndsc", 1.5)` and `make("ndsc", 1.5, chunk=128)`
-    build identical codecs, so they must land in one cohort — leaving the
-    caller's kwargs raw would split that cohort in two and compile every
-    vmapped round/decode program twice. Keywords a factory swallows through
-    `**_` stay as written (they don't have defaults to bind)."""
-    if name not in _REGISTRY:
-        raise ValueError(
-            f"unknown compressor {name!r}; available: {available()}")
-    sig = inspect.signature(_REGISTRY[name])
-    params = list(sig.parameters.values())
-    bound = sig.bind(budget, **kwargs)
-    bound.apply_defaults()
-    budget_val = bound.arguments[params[0].name]
-    items: dict = {}
-    for p in params[1:]:
-        if p.kind is inspect.Parameter.VAR_KEYWORD:
-            items.update(bound.arguments.get(p.name, {}))
-        else:
-            items[p.name] = bound.arguments[p.name]
-    budget_key = (float(budget_val) if np.isscalar(budget_val)
-                  else tuple(float(b) for b in budget_val))
-    return (name, budget_key, tuple(sorted(items.items())))
-
-
-_UNSET = object()
+from repro.codecs import registry as _registry
+from repro.codecs.base import (TreeCodec, TreeMeta, _total_dims,  # noqa: F401
+                               _tree_meta)
+from repro.codecs.registry import (_REGISTRY, _UNSET,  # noqa: F401
+                                   available, codec_spec,
+                                   gradcomp_config_for_budget, register)
 
 
 def make(name, budget=_UNSET, **kwargs) -> TreeCodec:
-    """Instantiate a registered compressor at a bits-per-dimension budget.
-
-    Two call forms:
-
-      make("ndsc", 1.5, chunk=64)        # name + budget + kwargs
-      make(spec)                         # the canonical spec tuple
-
-    where `spec` is the hashable identity produced by `codec_spec(...)` (and
-    carried on every codec as `TreeCodec.spec`):
-
-      (name, budget, kwargs_items)
-        name          registered factory name, e.g. "ndsc"
-        budget        float bits/dim, or a tuple of per-leaf floats
-        kwargs_items  sorted ((key, value), ...) of the factory kwargs,
-                      canonicalized against the factory signature
-
-    The forms round-trip by spec equality — `make(c.spec).spec == c.spec`
-    for every codec `c` — so checkpoints, benchmarks and cohort keys can
-    rebuild a codec from its spec alone, without re-plumbing the original
-    kwargs. The spec form takes no extra arguments (they are already baked
-    into the tuple)."""
-    if isinstance(name, (tuple, list)):
-        if budget is not _UNSET or kwargs:
-            raise ValueError("make(spec) takes no extra arguments: the "
-                             "budget and kwargs are part of the spec")
-        try:
-            name, budget, items = name
-            kwargs = dict(items)
-        except (TypeError, ValueError):
-            raise ValueError(f"malformed codec spec {name!r}; expected "
-                             "(name, budget, kwargs_items) from codec_spec")
-        if isinstance(budget, tuple):       # per-leaf budgets
-            budget = list(budget)
-    elif budget is _UNSET:
-        budget = 4.0
-    if name not in _REGISTRY:
-        raise ValueError(
-            f"unknown compressor {name!r}; available: {available()}")
-    codec = _REGISTRY[name](budget, **kwargs)
-    return dataclasses.replace(codec, spec=codec_spec(name, budget, kwargs))
-
-
-def _tree_meta(tree) -> tuple:
-    leaves, treedef = jax.tree.flatten(tree)
-    return treedef, [(int(np.prod(x.shape)) if x.shape else 1,
-                      tuple(x.shape), x.dtype) for x in leaves]
-
-
-def _total_dims(tree) -> int:
-    return sum(int(np.prod(x.shape)) if x.shape else 1
-               for x in jax.tree.leaves(tree))
-
-
-# ---------------------------------------------------------------------------
-# identity — the no-compression reference (f32 wire)
-# ---------------------------------------------------------------------------
-@register("identity")
-def _identity(budget: float = 32.0, **_) -> TreeCodec:
-    def encode(key, tree, round_idx=0):
-        return jax.tree.map(lambda x: x.astype(jnp.float32), tree)
-
-    def decode(wire, meta):
-        return jax.tree.map(
-            lambda x, info: x.astype(info[2]), wire,
-            jax.tree.unflatten(meta.treedef, meta.infos))
-
-    def meta(tree):
-        treedef, infos = _tree_meta(tree)
-        return TreeMeta(treedef, infos)
-
-    return TreeCodec(
-        "identity", encode, decode, meta,
-        wire_bits=lambda tree: 32.0 * _total_dims(tree),
-        wire_bytes=lambda wire, meta: 4.0 * sum(i[0] for i in meta.infos),
-        rate=32.0)
-
-
-# ---------------------------------------------------------------------------
-# ndsc — the chunked Hadamard-frame codec from repro.dist.gradcomp
-# ---------------------------------------------------------------------------
-def gradcomp_config_for_budget(budget: float, chunk: int = 128,
-                               dithered: bool = False, exact_keep: bool = True,
-                               seed: int = 0) -> G.GradCompConfig:
-    """Map a fractional bits/dim budget onto a GradCompConfig with
-    `effective_bits == budget`: the smallest packable word size that covers
-    the budget, with a chunk keep-fraction making up the fractional part."""
-    if not 0.0 < budget <= 8.0:
-        raise ValueError(f"ndsc budget must be in (0, 8], got {budget}")
-    bits = next(b for b in (1, 2, 4, 8) if b >= budget)
-    return G.GradCompConfig(
-        bits=bits, chunk=chunk, keep_fraction=min(budget / bits, 1.0),
-        exact_keep=exact_keep, dithered=dithered,
-        error_feedback=not dithered, seed=seed)
-
-
-@register("ndsc")
-def _ndsc(budget, *, chunk: int = 128, dithered: bool = False,
-          exact_keep: bool = True, seed: int = 0) -> TreeCodec:
-    scalar = np.isscalar(budget)
-
-    def cfgs_for(n_leaves: int) -> list:
-        budgets = [budget] * n_leaves if scalar else list(budget)
-        if len(budgets) != n_leaves:
-            raise ValueError(f"{len(budgets)} per-leaf budgets for "
-                             f"{n_leaves} leaves")
-        return [gradcomp_config_for_budget(b, chunk, dithered, exact_keep,
-                                           seed) for b in budgets]
-
-    def encode(key, tree, round_idx=0):
-        leaves, treedef = jax.tree.flatten(tree)
-        cfgs = cfgs_for(len(leaves))
-        payloads = [
-            G.encode_leaf(x, i, c, round_idx,
-                          key=jax.random.fold_in(key, i))
-            for i, (x, c) in enumerate(zip(leaves, cfgs))]
-        return jax.tree.unflatten(treedef, payloads)
-
-    def encode_ef(key, tree, meta, round_idx=0):
-        leaves = meta.treedef.flatten_up_to(tree)
-        pairs = [
-            G.encode_leaf_ef(x, i, c, round_idx,
-                             key=jax.random.fold_in(key, i),
-                             residual_dtype=info[2])
-            for i, (x, c, info) in
-            enumerate(zip(leaves, meta.extra, meta.infos))]
-        wire = jax.tree.unflatten(meta.treedef, [p for p, _ in pairs])
-        resid = jax.tree.unflatten(meta.treedef, [r for _, r in pairs])
-        return wire, resid
-
-    def meta(tree):
-        treedef, infos = _tree_meta(tree)
-        return TreeMeta(treedef, infos, extra=cfgs_for(len(infos)))
-
-    def decode(wire, meta):
-        plist = meta.treedef.flatten_up_to(wire)
-        outs = [G.decode_leaf(p, i, size, shape, dtype, c)
-                for i, (p, (size, shape, dtype), c) in
-                enumerate(zip(plist, meta.infos, meta.extra))]
-        return jax.tree.unflatten(meta.treedef, outs)
-
-    def wire_bits(tree):
-        leaves, _ = jax.tree.flatten(tree)
-        cfgs = cfgs_for(len(leaves))
-        return sum(
-            G.wire_bytes_tree(x, c)["payload_bytes"] * 8.0
-            for x, c in zip(leaves, cfgs))
-
-    def wire_bytes(wire, meta):
-        plist = meta.treedef.flatten_up_to(wire)
-        return sum(G.wire_bytes_payload(p, c)
-                   for p, c in zip(plist, meta.extra))
-
-    tag = (f"ndsc(R={budget:g})" if scalar
-           else f"ndsc(R per leaf={[round(float(b), 3) for b in budget]})")
-    return TreeCodec(tag, encode, decode, meta, wire_bits, wire_bytes,
-                     rate=(gradcomp_config_for_budget(
-                         budget, chunk).effective_bits if scalar else None),
-                     encode_ef=encode_ef)
-
-
-# ---------------------------------------------------------------------------
-# dsc — the dense frame Codec from core.coding (per-leaf Hadamard frames)
-# ---------------------------------------------------------------------------
-@register("dsc")
-def _dsc(budget, *, dithered: bool = False, embedding: str = "near_democratic",
-         seed: int = 0) -> TreeCodec:
-    from repro.core.embeddings import EmbeddingSpec
-    codec_cache: dict = {}
-
-    def codec_for(leaf_idx: int, n: int) -> Codec:
-        k = (leaf_idx, n)
-        if k not in codec_cache:
-            key = jax.random.fold_in(jax.random.key(seed), leaf_idx)
-            frame = frames_lib.hadamard_frame(key, n)
-            codec_cache[k] = Codec(frame, CodecConfig(
-                bits_per_dim=float(budget), dithered=dithered,
-                embedding=EmbeddingSpec(kind=embedding)))
-        return codec_cache[k]
-
-    def encode(key, tree, round_idx=0):
-        leaves, treedef = jax.tree.flatten(tree)
-        outs = []
-        for i, x in enumerate(leaves):
-            c = codec_for(i, int(np.prod(x.shape)) if x.shape else 1)
-            kk = jax.random.fold_in(jax.random.fold_in(key, i), round_idx)
-            p = c.encode(x.astype(jnp.float32).reshape(-1), kk)
-            outs.append({"indices": p.indices, "scale": p.scale}
-                        | ({"mask": p.mask} if p.mask is not None else {}))
-        return jax.tree.unflatten(treedef, outs)
-
-    def meta(tree):
-        treedef, infos = _tree_meta(tree)
-        return TreeMeta(treedef, infos)
-
-    def decode(wire, meta):
-        from repro.core.coding import Payload
-        plist = meta.treedef.flatten_up_to(wire)
-        outs = []
-        for i, (p, (size, shape, dtype)) in enumerate(
-                zip(plist, meta.infos)):
-            c = codec_for(i, size)
-            y = c.decode(Payload(p["indices"], p["scale"], p.get("mask")))
-            outs.append(y.reshape(shape).astype(dtype))
-        return jax.tree.unflatten(meta.treedef, outs)
-
-    def wire_bits(tree):
-        leaves, _ = jax.tree.flatten(tree)
-        return sum(
-            codec_for(i, int(np.prod(x.shape)) if x.shape else 1).wire_bits()
-            + 32.0 for i, x in enumerate(leaves))
-
-    def wire_bytes(wire, meta):
-        total = 0.0
-        for i, (p, (size, _, _)) in enumerate(
-                zip(meta.treedef.flatten_up_to(wire), meta.infos)):
-            c = codec_for(i, size)
-            per_idx = 1.0 if c.sublinear else math.log2(c.levels)
-            if "mask" in p:
-                # the keep mask is NOT charged: it comes from the shared
-                # PRNG key, so the decoder regenerates it (same convention
-                # as Codec.wire_bits, which counts kept coordinates only)
-                total += float(jnp.sum(p["mask"])) * per_idx / 8.0 + 4.0
-                continue
-            total += (c.N * per_idx) / 8.0 + 4.0
-        return total
-
-    return TreeCodec(f"dsc(R={budget:g})", encode, decode, meta,
-                     wire_bits, wire_bytes, rate=float(budget))
-
-
-# ---------------------------------------------------------------------------
-# core.baselines wrappers — simulation-only wire (the decoded tree itself)
-# ---------------------------------------------------------------------------
-def _wrap_baseline(comp: B.Compressor):
-    def encode(key, tree, round_idx=0):
-        leaves, treedef = jax.tree.flatten(tree)
-        outs = []
-        for i, x in enumerate(leaves):
-            kk = jax.random.fold_in(jax.random.fold_in(key, i), round_idx)
-            flat = x.astype(jnp.float32).reshape(-1)
-            outs.append(comp.roundtrip(kk, flat))
-        return jax.tree.unflatten(treedef, outs)
-
-    def meta(tree):
-        treedef, infos = _tree_meta(tree)
-        return TreeMeta(treedef, infos)
-
-    def decode(wire, meta):
-        return jax.tree.unflatten(meta.treedef, [
-            y.reshape(shape).astype(dtype)
-            for y, (_, shape, dtype) in
-            zip(meta.treedef.flatten_up_to(wire), meta.infos)])
-
-    def wire_bits(tree):
-        return sum(comp.wire_bits(int(np.prod(x.shape)) if x.shape else 1)
-                   for x in jax.tree.leaves(tree))
-
-    def wire_bytes(wire, meta):
-        return sum(comp.wire_bits(size) for size, _, _ in meta.infos) / 8.0
-
-    return TreeCodec(comp.name, encode, decode, meta, wire_bits, wire_bytes,
-                     sim_only=True)
-
-
-@register("sign")
-def _sign(budget=1.0, *, scaled: bool = True, **_) -> TreeCodec:
-    return _wrap_baseline(B.sign_compressor(scaled))
-
-
-@register("ternary")
-def _ternary(budget=math.log2(3), **_) -> TreeCodec:
-    return _wrap_baseline(B.ternary())
-
-
-@register("qsgd")
-def _qsgd(budget=4.0, **_) -> TreeCodec:
-    # n(1 + log2(s+1)) + 32 bits: sign + stochastic level index per coord
-    s = max(1, int(round(2.0 ** (budget - 1.0) - 1.0)))
-    return _wrap_baseline(B.qsgd(s))
-
-
-@register("naive")
-def _naive(budget=4.0, **_) -> TreeCodec:
-    levels = max(2, int(round(2.0 ** budget)))
-    return _wrap_baseline(B.naive_uniform(levels))
-
-
-@register("dither")
-def _dither(budget=4.0, **_) -> TreeCodec:
-    levels = max(2, int(round(2.0 ** budget)))
-    return _wrap_baseline(B.standard_dither(levels))
-
-
-@register("topk")
-def _topk(budget=4.0, *, k_fraction: Optional[float] = None,
-          quant_levels: Optional[int] = 256, **_) -> TreeCodec:
-    per_val = 32.0 if quant_levels is None else math.log2(quant_levels)
-    kf = budget / per_val if k_fraction is None else k_fraction
-    return _wrap_baseline(B.topk(min(max(kf, 1e-4), 1.0), quant_levels))
-
-
-@register("randk")
-def _randk(budget=4.0, *, k_fraction: Optional[float] = None,
-           quant_levels: Optional[int] = 256, unbiased: bool = False,
-           **_) -> TreeCodec:
-    per_val = 32.0 if quant_levels is None else math.log2(quant_levels)
-    kf = budget / per_val if k_fraction is None else k_fraction
-    return _wrap_baseline(
-        B.randk(min(max(kf, 1e-4), 1.0), quant_levels, unbiased))
+    """Deprecated alias of `repro.codecs.make` (see module docstring)."""
+    warnings.warn(
+        "repro.fed.registry has moved to repro.codecs; call "
+        "repro.codecs.make(...) (the repro.fed.registry path will be "
+        "removed after one release)", DeprecationWarning, stacklevel=2)
+    if budget is _UNSET:
+        return _registry.make(name, **kwargs)
+    return _registry.make(name, budget, **kwargs)

@@ -69,6 +69,18 @@ def fwht(x: jax.Array) -> jax.Array:
     return _ref.fwht(x)
 
 
+def rotate(chunks: jax.Array, signs: jax.Array) -> jax.Array:
+    """Apply the randomized-Hadamard frame chunk-wise: H·(D·x) — the
+    `transform` stage of `repro.codecs.stages`. Rides the `fwht` dispatch
+    (Pallas on TPU, jnp reference on CPU, counters included)."""
+    return fwht(chunks * signs)
+
+
+def unrotate(x: jax.Array, signs: jax.Array) -> jax.Array:
+    """Inverse of `rotate` (H orthonormal, D its own inverse): D·(H·x)."""
+    return fwht(x) * signs
+
+
 def quantize_pack(x: jax.Array, scale: jax.Array, bits: int) -> jax.Array:
     """Fused uniform-quantize + bit-pack to int32 words (bits ∈ {1,2,4,8})."""
     if _use_pallas():

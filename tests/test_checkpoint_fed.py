@@ -8,7 +8,8 @@ import pytest
 from repro.checkpoint import (federation_state, restore_federation,
                               save_federation)
 from repro.fed import (AdaptiveConfig, ClientConfig, FedConfig, Federation,
-                       ServerConfig, registry)
+                       ServerConfig)
+from repro import codecs as registry
 from repro.optimizer import sgd
 
 

@@ -6,7 +6,8 @@ import pytest
 
 from repro.core import optim as core_optim
 from repro.fed import (ClientConfig, FedConfig, Federation, ServerConfig,
-                       clients as clients_lib, registry, server as server_lib)
+                       clients as clients_lib, server as server_lib)
+from repro import codecs as registry
 from repro.optimizer import sgd
 
 

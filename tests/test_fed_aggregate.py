@@ -8,7 +8,8 @@ import numpy as np
 import pytest
 
 from repro.fed import (AdaptiveConfig, ClientConfig, FedConfig, Federation,
-                       ServerConfig, registry, server as server_lib)
+                       ServerConfig, server as server_lib)
+from repro import codecs as registry
 from repro.optimizer import sgd
 
 

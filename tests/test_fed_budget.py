@@ -5,7 +5,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.fed import budget, registry
+from repro.fed import budget
+from repro import codecs as registry
 from repro.fed.registry import gradcomp_config_for_budget
 
 

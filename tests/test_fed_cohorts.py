@@ -8,7 +8,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.fed import (AdaptiveConfig, ClientConfig, FedConfig, Federation,
                        NormEMA, ServerConfig, budget, clients as clients_lib,
-                       registry, rounds as rounds_lib)
+                       rounds as rounds_lib)
+from repro import codecs as registry
 
 
 # ---------------------------------------------------------------------------

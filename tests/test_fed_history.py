@@ -11,8 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import restore_federation, save_federation
-from repro.fed import (ClientConfig, FedConfig, Federation, ServerConfig,
-                       registry)
+from repro.fed import (ClientConfig, FedConfig, Federation, ServerConfig)
+from repro import codecs as registry
 
 DOCUMENTED_KEYS = {"round", "loss", "wire_bytes", "analytic_bytes",
                    "cum_bytes", "participants", "stragglers", "realloc",

@@ -7,8 +7,8 @@ import pytest
 
 from repro.dist.sharding import lane_pspec, padded_lanes
 from repro.fed import (ClientConfig, FedConfig, Federation, ServerConfig,
-                       clients as clients_lib, mesh as mesh_lib, registry,
-                       server as server_lib)
+                       clients as clients_lib, mesh as mesh_lib, server as server_lib)
+from repro import codecs as registry
 from repro.optimizer import sgd
 
 
@@ -174,6 +174,55 @@ def test_mesh_backend_requires_cohorts():
                    use_cohorts=False)
     with pytest.raises(ValueError, match="backend"):
         Federation(loss_fn, params, shards, codecs, backend="pmap")
+
+
+# ---------------------------------------------------------------------------
+# sub-linear budgets (R < 1, exact-keep chunk drop) on the mesh backend
+# ---------------------------------------------------------------------------
+def test_mesh_sublinear_budgets_ledger_and_bitexact(data_mesh):
+    """An all-sub-linear population (every codec R < 1 with exact_keep):
+    the realized byte ledger equals the analytic audit EVERY round on the
+    mesh backend — exact-keep makes the kept-chunk count deterministic, so
+    sharding lanes over 2 or 4 devices must not perturb a single mask —
+    and the whole run stays bit-exact with the vmap cohort engine."""
+    ka, kx = jax.random.split(jax.random.key(7))
+    m, dim, n = 5, 96, 24
+    a = jax.random.normal(ka, (m, n, dim)) / jnp.sqrt(n)
+    x_true = jax.random.normal(kx, (dim,))
+    shards = [{"a": a[i], "b": a[i] @ x_true} for i in range(m)]
+
+    def loss_fn(p, batch):
+        r = batch["a"] @ p["x"] - batch["b"]
+        return 0.5 * jnp.mean(r * r)
+
+    params = {"x": jnp.zeros(dim)}
+    codecs_ = ([registry.make("ndsc", budget=0.25, chunk=32)
+                for _ in range(3)]
+               + [registry.make("ndsc", budget=0.5, chunk=32)
+                  for _ in range(2)])
+    for c in codecs_:
+        assert c.rate < 1.0                      # genuinely sub-linear
+    analytic_of = {i: codecs_[i].wire_bits(params) / 8.0 for i in range(m)}
+
+    runs = {}
+    for backend in ("vmap", "mesh"):
+        fed = Federation(loss_fn, params, shards, list(codecs_),
+                         ClientConfig(local_steps=2, lr=0.3), ServerConfig(),
+                         seed=5, backend=backend,
+                         mesh=data_mesh if backend == "mesh" else None)
+        hist = fed.run(FedConfig(num_rounds=4, seed=13))
+        assert hist["wire_bytes"] == hist["analytic_bytes"]
+        for t, participants in enumerate(hist["participants"]):
+            expect = sum(analytic_of[i] for i in participants)
+            assert hist["wire_bytes"][t] == expect, (
+                f"round {t} ({backend}): sub-linear ledger "
+                f"{hist['wire_bytes'][t]} ≠ analytic {expect}")
+        runs[backend] = (fed, hist)
+    assert runs["vmap"][1]["wire_bytes"] == runs["mesh"][1]["wire_bytes"]
+    _assert_trees_equal(runs["vmap"][0].server.params,
+                        runs["mesh"][0].server.params)
+    for sv, sm in zip(runs["vmap"][0].states, runs["mesh"][0].states):
+        _assert_trees_equal(sv.ef, sm.ef)
 
 
 # ---------------------------------------------------------------------------

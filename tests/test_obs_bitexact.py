@@ -15,8 +15,8 @@ from repro import configs
 from repro.data import batch_for_shape
 from repro.dist import step as step_lib
 from repro.dist.gradcomp import GradCompConfig
-from repro.fed import (ClientConfig, FedConfig, Federation, ServerConfig,
-                       registry)
+from repro.fed import (ClientConfig, FedConfig, Federation, ServerConfig)
+from repro import codecs as registry
 from repro.models import model as model_lib
 from repro.obs import core as obs
 from repro.obs import recompile
