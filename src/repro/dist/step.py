@@ -104,11 +104,14 @@ def _with_obs(fn, name: str, gc: G.GradCompConfig, payload_bytes):
     """Host-side instrumentation around a jit'd train step. The wrapper is
     call-transparent (same signature, same outputs); `lower` and the
     compile cache stay reachable for the dry-run launcher and the tests."""
-    recompile_lib.register(name, fn)
+    recompile_lib.register(name, fn, wire_bytes_per_call=payload_bytes)
 
     def stepper(params, opt_state, ef, batch):
         if not obs_lib.enabled():
             return fn(params, opt_state, ef, batch)
+        obs_lib.observe_program_call(name, fn,
+                                     (params, opt_state, ef, batch),
+                                     wire_bytes=payload_bytes)
         with obs_lib.span(name, strategy=gc.strategy):
             out = fn(params, opt_state, ef, batch)
         obs_lib.counter("dist.steps", 1, strategy=gc.strategy)

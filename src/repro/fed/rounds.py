@@ -391,13 +391,22 @@ class Federation:
                 groups.append((members, decoded, norms))
             else:
                 for i in members:
+                    obs_lib.observe_program_call(
+                        "fed.round.scalar", self._fn_of[i],
+                        (self.server.params, self.datas[i], self.states[i],
+                         round_idx), span="fed.clients.compute",
+                        wire_bytes=self._analytic_bits[i] / 8.0)
                     with obs_lib.span("fed.clients.compute", lanes=1,
                                       path="scalar"):
                         wires_of[i], self.states[i] = self._fn_of[i](
                             self.server.params, self.datas[i],
                             self.states[i], round_idx)
+                    dfn = self._scalar_decode(i)
+                    obs_lib.observe_program_call(
+                        "fed.decode.scalar", dfn, (wires_of[i],),
+                        span="fed.decode")
                     with obs_lib.span("fed.decode", lanes=1, path="scalar"):
-                        decoded1, norm1 = self._scalar_decode(i)(wires_of[i])
+                        decoded1, norm1 = dfn(wires_of[i])
                     groups.append(([i], decoded1, norm1))
         return wires_of, groups
 
@@ -423,12 +432,20 @@ class Federation:
             data = clients_lib.stack_trees([self.datas[i] for i in members])
             self._stacked_data[key] = (mtuple, data)
         state = clients_lib.stack_trees([self.states[i] for i in members])
+        obs_lib.observe_program_call(
+            "fed.round.cohort", fn,
+            (self.server.params, data, state, round_idx),
+            span="fed.clients.compute",
+            wire_bytes=len(members) * self._analytic_bits[members[0]] / 8.0)
         with obs_lib.span("fed.clients.compute", lanes=len(members),
                           path="vmap"):
             wires, new_states = fn(self.server.params, data, state,
                                    round_idx)
+        dfn = self._cohort_decode(key, members[0])
+        obs_lib.observe_program_call("fed.decode.cohort", dfn, (wires,),
+                                     span="fed.decode")
         with obs_lib.span("fed.decode", lanes=len(members), path="vmap"):
-            decoded, norms = self._cohort_decode(key, members[0])(wires)
+            decoded, norms = dfn(wires)
         return wires, new_states, decoded, norms
 
     def _run_cohort_mesh(self, key, members: Sequence[int], round_idx: int):
@@ -462,6 +479,11 @@ class Federation:
             self._stacked_data[key] = (mtuple, data)
         state = clients_lib.stack_padded(
             [self.states[i] for i in members], total)
+        obs_lib.observe_program_call(
+            "fed.round.mesh", fn,
+            (self.server.params, data, state, round_idx),
+            span="fed.clients.compute",
+            wire_bytes=len(members) * self._analytic_bits[members[0]] / 8.0)
         with obs_lib.span("fed.clients.compute", lanes=len(members),
                           padded=total, path="mesh"):
             wires, new_states, decoded, norms = fn(self.server.params, data,

@@ -57,6 +57,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import core as obs_lib
 from repro.obs import recompile as recompile_lib
 from repro.optimizer.optim import Optimizer, apply_updates
 
@@ -286,7 +287,8 @@ def _stacked_mean_fn(sum_mode: str):
             else _pairwise_weighted_sum)
     return recompile_lib.register(
         "fed.aggregate.mean",
-        jax.jit(lambda stacked, w: wsum(stacked, w / jnp.sum(w))))
+        jax.jit(lambda stacked, w: wsum(stacked, w / jnp.sum(w))),
+        span="fed.round.aggregate")
 
 
 @functools.lru_cache(maxsize=None)
@@ -309,7 +311,8 @@ def _stacked_memory_fn(has_slot_weights: bool):
             direction = jax.tree.map(lambda m: jnp.mean(m, axis=0), memory)
         return memory, direction
 
-    return recompile_lib.register("fed.aggregate.memory", jax.jit(fn))
+    return recompile_lib.register("fed.aggregate.memory", jax.jit(fn),
+                                  span="fed.round.aggregate")
 
 
 def aggregate_stacked(state: ServerState, cfg: ServerConfig, stacked,
@@ -337,14 +340,21 @@ def aggregate_stacked(state: ServerState, cfg: ServerConfig, stacked,
     # direction comes from the slots), exactly as in the list reference
     if cfg.aggregator == "fedavg":
         _check_weights(weights)
-        mean = _stacked_mean_fn(cfg.sum_mode)(stacked, w)
+        mean_fn = _stacked_mean_fn(cfg.sum_mode)
+        obs_lib.observe_program_call("fed.aggregate.mean", mean_fn,
+                                     (stacked, w),
+                                     span="fed.round.aggregate")
+        mean = mean_fn(stacked, w)
         return ServerState(_apply_delta(state.params, mean, cfg.server_lr),
                            state.opt_state, state.memory)
 
     if cfg.aggregator == "fedopt":
         _check_weights(weights)
-        return _fedopt_tail(state, cfg,
-                            _stacked_mean_fn(cfg.sum_mode)(stacked, w))
+        mean_fn = _stacked_mean_fn(cfg.sum_mode)
+        obs_lib.observe_program_call("fed.aggregate.mean", mean_fn,
+                                     (stacked, w),
+                                     span="fed.round.aggregate")
+        return _fedopt_tail(state, cfg, mean_fn(stacked, w))
 
     if participant_ids is None:
         raise ValueError("fedmem aggregation needs participant_ids")
@@ -354,7 +364,10 @@ def aggregate_stacked(state: ServerState, cfg: ServerConfig, stacked,
         slot_w = jnp.asarray(np.asarray(slot_weights), jnp.float32)
     else:
         slot_w = jnp.zeros((0,), jnp.float32)
-    memory, direction = _stacked_memory_fn(slot_weights is not None)(
-        state.memory, stacked, idx, slot_w)
+    mem_fn = _stacked_memory_fn(slot_weights is not None)
+    obs_lib.observe_program_call("fed.aggregate.memory", mem_fn,
+                                 (state.memory, stacked, idx, slot_w),
+                                 span="fed.round.aggregate")
+    memory, direction = mem_fn(state.memory, stacked, idx, slot_w)
     return ServerState(_apply_delta(state.params, direction, cfg.server_lr),
                        state.opt_state, memory)

@@ -18,9 +18,18 @@ reference-fallback events" from the event stream instead of relying on
 the raise alone. These fire at Python call time (i.e. once per trace /
 compilation when called under jit, per call when eager), never inside
 compiled code, and cost one global load when obs is disabled.
+
+Cost model: each dispatch additionally records the resolved kernel
+callable + abstract signature with the active session's cost capture
+(`kernels.<op>.<path>` programs, `jit_wrap=True` — the session's
+`costs()` snapshot lowers a FRESH never-called jit of the callable, so
+the dispatch path itself never gains a jit wrapper or a compile).
+Compile-time parameters (bits, n, …) are closed over with
+`functools.partial` and keyed into the signature via `static=`.
 """
 from __future__ import annotations
 
+import functools
 import os
 
 import jax
@@ -52,11 +61,17 @@ def _count_forced_error(op: str, n) -> None:
     obs.counter("kernels.forced_error", 1, op=op, n=int(n))
 
 
+def _observe(op: str, path: str, fn, args, kwargs=None, static=None) -> None:
+    obs.observe_program_call(f"kernels.{op}.{path}", fn, args, kwargs,
+                             static=static, jit_wrap=True)
+
+
 def fwht(x: jax.Array) -> jax.Array:
     """Normalized Walsh–Hadamard transform along the last axis (power-of-2 len)."""
     if _use_pallas():
         if x.shape[-1] <= _fwht_kernel.MAX_VMEM_N:
             _count_dispatch("fwht", "pallas", x.shape[-1])
+            _observe("fwht", "pallas", _fwht_kernel.fwht_pallas, (x,))
             return _fwht_kernel.fwht_pallas(x)
         if _forced():
             _count_forced_error("fwht", x.shape[-1])
@@ -66,6 +81,7 @@ def fwht(x: jax.Array) -> jax.Array:
                 "forced path refuses to silently fall back to the jnp "
                 "reference")
     _count_dispatch("fwht", "ref", x.shape[-1])
+    _observe("fwht", "ref", _ref.fwht, (x,))
     return _ref.fwht(x)
 
 
@@ -85,8 +101,15 @@ def quantize_pack(x: jax.Array, scale: jax.Array, bits: int) -> jax.Array:
     """Fused uniform-quantize + bit-pack to int32 words (bits ∈ {1,2,4,8})."""
     if _use_pallas():
         _count_dispatch("quantize_pack", "pallas", x.shape[-1])
+        _observe("quantize_pack", "pallas",
+                 functools.partial(_quantpack_kernel.quantize_pack_pallas,
+                                   bits=bits),
+                 (x, scale), static=("bits", bits))
         return _quantpack_kernel.quantize_pack_pallas(x, scale, bits)
     _count_dispatch("quantize_pack", "ref", x.shape[-1])
+    _observe("quantize_pack", "ref",
+             functools.partial(_ref.quantize_pack, bits=bits),
+             (x, scale), static=("bits", bits))
     return _ref.quantize_pack(x, scale, bits)
 
 
@@ -94,8 +117,15 @@ def unpack_dequant(words: jax.Array, scale: jax.Array, bits: int, n: int) -> jax
     """Fused unpack + dequantize (inverse of quantize_pack)."""
     if _use_pallas():
         _count_dispatch("unpack_dequant", "pallas", n)
+        _observe("unpack_dequant", "pallas",
+                 functools.partial(_quantpack_kernel.unpack_dequant_pallas,
+                                   bits=bits, n=n),
+                 (words, scale), static=("bits", bits, "n", n))
         return _quantpack_kernel.unpack_dequant_pallas(words, scale, bits, n)
     _count_dispatch("unpack_dequant", "ref", n)
+    _observe("unpack_dequant", "ref",
+             functools.partial(_ref.unpack_dequant, bits=bits, n=n),
+             (words, scale), static=("bits", bits, "n", n))
     return _ref.unpack_dequant(words, scale, bits, n)
 
 
@@ -112,6 +142,11 @@ def encode(chunks: jax.Array, signs: jax.Array, bits: int, *,
     if _use_pallas():
         if chunks.shape[-1] <= _quantencode_kernel.MAX_VMEM_N:
             _count_dispatch("encode", "pallas", chunks.shape[-1])
+            _observe("encode", "pallas",
+                     functools.partial(_quantencode_kernel.encode_pallas,
+                                       bits=bits),
+                     (chunks, signs), {"dither": dither, "mask": mask},
+                     static=("bits", bits))
             return _quantencode_kernel.encode_pallas(
                 chunks, signs, bits, dither=dither, mask=mask)
         if _forced():
@@ -121,6 +156,10 @@ def encode(chunks: jax.Array, signs: jax.Array, bits: int, *,
                 f"exceeds the single-tile VMEM budget "
                 f"{_quantencode_kernel.MAX_VMEM_N}")
     _count_dispatch("encode", "ref", chunks.shape[-1])
+    _observe("encode", "ref",
+             functools.partial(_ref.encode, bits=bits),
+             (chunks, signs), {"dither": dither, "mask": mask},
+             static=("bits", bits))
     return _ref.encode(chunks, signs, bits, dither=dither, mask=mask)
 
 
@@ -138,6 +177,13 @@ def encode_ef(chunks: jax.Array, signs: jax.Array, bits: int, *,
     if _use_pallas():
         if chunks.shape[-1] <= _quantencode_kernel.MAX_VMEM_N:
             _count_dispatch("encode_ef", "pallas", chunks.shape[-1])
+            _observe("encode_ef", "pallas",
+                     functools.partial(_quantencode_kernel.encode_ef_pallas,
+                                       bits=bits, rescale=rescale,
+                                       residual_dtype=rdt),
+                     (chunks, signs), {"dither": dither, "mask": mask},
+                     static=("bits", bits, "rescale", rescale,
+                             "rdt", jnp.dtype(rdt).name))
             return _quantencode_kernel.encode_ef_pallas(
                 chunks, signs, bits, dither=dither, mask=mask,
                 rescale=rescale, residual_dtype=rdt)
@@ -148,5 +194,11 @@ def encode_ef(chunks: jax.Array, signs: jax.Array, bits: int, *,
                 f"exceeds the single-tile VMEM budget "
                 f"{_quantencode_kernel.MAX_VMEM_N}")
     _count_dispatch("encode_ef", "ref", chunks.shape[-1])
+    _observe("encode_ef", "ref",
+             functools.partial(_ref.encode_ef, bits=bits, rescale=rescale,
+                               residual_dtype=rdt),
+             (chunks, signs), {"dither": dither, "mask": mask},
+             static=("bits", bits, "rescale", rescale,
+                     "rdt", jnp.dtype(rdt).name))
     return _ref.encode_ef(chunks, signs, bits, dither=dither, mask=mask,
                           rescale=rescale, residual_dtype=rdt)

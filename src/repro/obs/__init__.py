@@ -14,6 +14,17 @@ that attributes compilation-cache growth to named jitted programs.
     obs.disable()                       # flushes JSONL, writes trace.json
     print(obs.report.render(session.summary()))
 
+v2 adds the cost-attributed layer: sessions capture the abstract call
+signatures of every registered jitted program that runs while they are
+active, and `session.costs()` / the summary's `costs` + per-span `attrib`
+blocks report compiler-modeled FLOPs / bytes per specialization, roofline
+fractions against a per-backend peak table (`obs.costs.peaks`), and
+achieved wire-bytes/s against the analytic R·n minimum-traffic model —
+all extracted via compile-free lowering, preserving the obs contract.
+`obs.history` + `obs.regress` persist benchmark runs to an append-only
+`BENCH_history.jsonl` and gate new runs against the trailing baseline
+(`python -m benchmarks.run --check-regressions`).
+
 Disabled (the default), every instrumentation call is a global load + an
 early return, and the instrumented layers (`repro.fed.rounds`,
 `repro.dist.step`, `repro.kernels.ops`, `repro.serve.scheduler`) are
@@ -23,17 +34,19 @@ outside compiled code. The package imports without jax; the profiler
 passthrough degrades to a recorded no-op when `jax.profiler` tracing is
 unavailable (CPU CI).
 """
-from repro.obs import recompile, report, sinks, trace
+from repro.obs import costs, history, recompile, regress, report, sinks, trace
 from repro.obs.core import (NOOP_SPAN, Obs, Span, counter, disable, enable,
-                            enabled, gauge, get, histogram, reset, span,
-                            suspended, traced, use)
-from repro.obs.sinks import JsonlSink, MemorySink, load_jsonl
+                            enabled, gauge, get, histogram,
+                            observe_program_call, reset, span, suspended,
+                            traced, use)
+from repro.obs.sinks import EventList, JsonlSink, MemorySink, load_jsonl
 from repro.obs.trace import ChromeTraceSink, build_trace, validate_trace
 
 __all__ = [
-    "ChromeTraceSink", "JsonlSink", "MemorySink", "NOOP_SPAN", "Obs",
-    "Span", "build_trace", "counter", "disable", "enable", "enabled",
-    "gauge", "get", "histogram", "load_jsonl", "recompile", "report",
-    "reset", "sinks", "span", "suspended", "trace", "traced", "use",
+    "ChromeTraceSink", "EventList", "JsonlSink", "MemorySink", "NOOP_SPAN",
+    "Obs", "Span", "build_trace", "costs", "counter", "disable", "enable",
+    "enabled", "gauge", "get", "histogram", "history", "load_jsonl",
+    "observe_program_call", "recompile", "regress", "report", "reset",
+    "sinks", "span", "suspended", "trace", "traced", "use",
     "validate_trace",
 ]

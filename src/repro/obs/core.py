@@ -31,6 +31,7 @@ import threading
 import time
 from typing import Optional
 
+from repro.obs import costs as costs_lib
 from repro.obs import recompile
 from repro.obs import report as report_lib
 from repro.obs import sinks as sinks_lib
@@ -85,8 +86,11 @@ class Obs:
     """One telemetry session: an event clock, a sink list, and a recompile
     baseline. Construct directly for tests, or via `enable()`."""
 
-    def __init__(self, sinks=(), jax_trace_dir: Optional[str] = None):
+    def __init__(self, sinks=(), jax_trace_dir: Optional[str] = None,
+                 costs: bool = True):
         self.sinks = list(sinks)
+        self.costs_enabled = costs
+        self._cost_captures: dict = {}   # sig -> capture record (costs.py)
         self._epoch = time.perf_counter()
         self._pid = os.getpid()
         self._tls = threading.local()
@@ -139,6 +143,29 @@ class Obs:
         self.emit({"type": "meta", "name": name, "ts": self.now(),
                    "pid": self._pid, "tid": 0, "data": data})
 
+    # -- cost capture --------------------------------------------------------
+    def observe_call(self, name: str, fn, args, kwargs=None, *,
+                     static=None, jit_wrap: bool = False,
+                     span: Optional[str] = None, wire_bytes=None) -> None:
+        """Record one observed call of a named program for the cost model
+        (abstract signature + call count + analytic wire bytes). Never
+        executes or compiles anything; never raises."""
+        if not self.costs_enabled:
+            return
+        try:
+            costs_lib.record_call(self._cost_captures, name, fn, args,
+                                  kwargs, static=static, jit_wrap=jit_wrap,
+                                  span=span, wire_bytes=wire_bytes)
+        except Exception:
+            pass                          # the cost model must never crash
+
+    def costs(self, *, compile_ok: bool = False) -> dict:
+        """Per-program cost snapshot of every specialization observed while
+        this session was active (see `repro.obs.costs.snapshot`). Default is
+        compile-free (`Lowered.cost_analysis`); `compile_ok=True` adds
+        `memory_analysis` via an AOT compile outside every jit cache."""
+        return costs_lib.snapshot(self._cost_captures, compile_ok=compile_ok)
+
     # -- readback ------------------------------------------------------------
     def memory_events(self) -> list:
         for s in self.sinks:
@@ -159,6 +186,14 @@ class Obs:
                                  recompiles=self.recompiles())
         s["jax_trace"] = {"active": self.jax_trace_active,
                           "error": self.jax_trace_error}
+        if self.costs_enabled:
+            try:
+                snap = self.costs()
+                s["costs"] = snap
+                costs_lib.attach_attrib(s, snap)
+            except Exception as e:        # degrade, never crash a summary
+                s["costs"] = {"error": f"{type(e).__name__}: {e}",
+                              "programs": {}}
         if self.closed:
             self._summary = s
         return s
@@ -174,6 +209,16 @@ class Obs:
         recompile.remove_callback(self._on_register)
         self.closed = True
         s = self.summary()          # caches (pins still alive here)
+        # surface attribution as counter tracks in the Chrome trace: one
+        # final sample per attributed span (after the cached summary, so
+        # these synthetic events never pollute the aggregates)
+        for span_name, sp in s["spans"].items():
+            at = sp.get("attrib") or {}
+            for key in ("roofline_frac", "flops_per_s_achieved",
+                        "wire_min_bytes_per_s"):
+                if at.get(key) is not None:
+                    self._metric("gauge", f"attrib.{span_name}.{key}",
+                                 at[key], {})
         self.meta("obs.summary", **{"spans": len(s["spans"]),
                                     "events": s["events"]})
         for sink in self.sinks:
@@ -201,13 +246,16 @@ def _set_active(obs: Optional[Obs]) -> None:
 
 def enable(*, memory: bool = True, jsonl: Optional[str] = None,
            trace: Optional[str] = None,
-           jax_trace_dir: Optional[str] = None, sinks=()) -> Obs:
+           jax_trace_dir: Optional[str] = None, sinks=(),
+           costs: bool = True) -> Obs:
     """Activate a new session. `memory=True` keeps events in-process for
     `summary()`; `jsonl=`/`trace=` add file sinks (the trace file is
     written at `disable()`); `jax_trace_dir=` starts the optional
     `jax.profiler` passthrough (no-op with a recorded reason when the
-    profiler is unavailable). Returns the session (keep it: `summary()`
-    stays readable after `disable()`)."""
+    profiler is unavailable); `costs=True` (default) captures per-program
+    call signatures for the device cost model (`session.costs()`, and the
+    `costs`/`attrib` blocks of the summary). Returns the session (keep it:
+    `summary()` stays readable after `disable()`)."""
     built = list(sinks)
     if memory:
         built.append(sinks_lib.MemorySink())
@@ -215,7 +263,7 @@ def enable(*, memory: bool = True, jsonl: Optional[str] = None,
         built.append(sinks_lib.JsonlSink(jsonl))
     if trace is not None:
         built.append(trace_lib.ChromeTraceSink(trace))
-    obs = Obs(built, jax_trace_dir=jax_trace_dir)
+    obs = Obs(built, jax_trace_dir=jax_trace_dir, costs=costs)
     _STACK.append(obs)
     _set_active(obs)
     return obs
@@ -289,6 +337,20 @@ def histogram(name: str, value, **attrs) -> None:
     o = _ACTIVE
     if o is not None:
         o._metric("hist", name, value, attrs)
+
+
+def observe_program_call(name: str, fn, args, kwargs=None, *,
+                         static=None, jit_wrap: bool = False,
+                         span: Optional[str] = None, wire_bytes=None) -> None:
+    """Cost-model capture hook for instrumented call sites: record that the
+    named program is about to run with these arguments. Disabled sessions
+    (and sessions with `costs=False`) cost one global load + early return;
+    active capture is one dict probe per call (no execution, no compile)."""
+    o = _ACTIVE
+    if o is None:
+        return
+    o.observe_call(name, fn, args, kwargs, static=static, jit_wrap=jit_wrap,
+                   span=span, wire_bytes=wire_bytes)
 
 
 def traced(name: Optional[str] = None, **attrs):

@@ -25,7 +25,7 @@ import itertools
 import weakref
 from typing import Callable, Optional
 
-_REGISTRY: dict[int, dict] = {}   # id -> {name, ref, last}
+_REGISTRY: dict[int, dict] = {}   # id -> {name, ref, last, annotations}
 _IDS = itertools.count()
 _CALLBACKS: list[Callable] = []   # called as cb(name, fn) on every register
 
@@ -43,17 +43,35 @@ def cache_size(fn) -> Optional[int]:
         return None
 
 
-def register(name: str, fn):
+def register(name: str, fn, **annotations):
     """Track `fn`'s compilation cache under `name`. Returns `fn` (so call
-    sites can wrap: `return register("x", jax.jit(f))`)."""
+    sites can wrap: `return register("x", jax.jit(f))`).
+
+    Keyword `annotations` attach static facts the cost model reads per
+    program — e.g. `span="fed.round.aggregate"` (which measured span this
+    program's device work should be attributed to) or
+    `wire_bytes_per_call=...` (the analytic minimum-traffic bytes one call
+    puts on the wire). Re-registering a name merges annotations
+    (`annotations_by_name` folds entries left-to-right)."""
     try:
         ref = weakref.ref(fn)
     except TypeError:                     # non-weakrefable: hold it
         ref = (lambda fn=fn: fn)
-    _REGISTRY[next(_IDS)] = {"name": name, "ref": ref, "last": 0}
+    _REGISTRY[next(_IDS)] = {"name": name, "ref": ref, "last": 0,
+                             "annotations": dict(annotations)}
     for cb in list(_CALLBACKS):
         cb(name, fn)
     return fn
+
+
+def annotations_by_name() -> dict:
+    """{program name: merged annotation dict} over all registrations."""
+    out: dict[str, dict] = {}
+    for entry in _REGISTRY.values():
+        ann = entry.get("annotations")
+        if ann:
+            out.setdefault(entry["name"], {}).update(ann)
+    return out
 
 
 def add_callback(cb: Callable) -> None:

@@ -23,7 +23,10 @@ def summarize(events, recompiles=None) -> dict:
     spans:    per name — count, total_s, mean_s, max_s
     counters: per name — total (sum of values), count
     gauges:   per name — last, min, max
-    hists:    per name — count, mean, p50, p95, min, max
+    hists:    per name — count, mean, p50, p95, p99, min, max
+
+    Every per-name dict is key-sorted so summaries (and their JSON dumps)
+    diff cleanly across runs.
     """
     spans: dict = {}
     counters: dict = {}
@@ -59,10 +62,16 @@ def summarize(events, recompiles=None) -> dict:
                         "mean": sum(vals) / len(vals),
                         "p50": _percentile(vals, 0.50),
                         "p95": _percentile(vals, 0.95),
+                        "p99": _percentile(vals, 0.99),
                         "min": vals[0], "max": vals[-1]}
-    return {"events": len(events), "spans": spans, "counters": counters,
-            "gauges": gauges, "hists": hstats,
-            "recompiles": dict(recompiles or {})}
+
+    def _sorted(d):
+        return {k: d[k] for k in sorted(d)}
+
+    rec = dict(recompiles or {})
+    return {"events": len(events), "spans": _sorted(spans),
+            "counters": _sorted(counters), "gauges": _sorted(gauges),
+            "hists": _sorted(hstats), "recompiles": _sorted(rec)}
 
 
 def render(summary: dict, title: str = "obs summary") -> str:
@@ -94,11 +103,56 @@ def render(summary: dict, title: str = "obs summary") -> str:
     hists = summary.get("hists", {})
     if hists:
         lines.append(f"  {'histogram':<30} {'count':>7} {'mean':>10} "
-                     f"{'p50':>10} {'p95':>10}")
+                     f"{'p50':>10} {'p95':>10} {'p99':>10}")
         for name in sorted(hists):
             h = hists[name]
             lines.append(f"  {name:<30} {h['count']:>7} {h['mean']:>10.4g} "
-                         f"{h['p50']:>10.4g} {h['p95']:>10.4g}")
+                         f"{h['p50']:>10.4g} {h['p95']:>10.4g} "
+                         f"{h.get('p99', h['max']):>10.4g}")
+    attrib = {name: sp["attrib"] for name, sp in spans.items()
+              if isinstance(sp, dict) and sp.get("attrib")}
+    if attrib:
+        lines.append(f"  {'attrib (roofline)':<24} {'meas ms':>9} "
+                     f"{'model ms':>9} {'frac':>7} {'bound':>6} "
+                     f"{'GF/s':>8} {'wire B/s':>10} {'cov':>5}")
+        for name in sorted(attrib):
+            a = attrib[name]
+
+            def g(key, scale=1.0, fmt="{:.3g}", a=a):
+                v = a.get(key)
+                return fmt.format(v * scale) if v is not None else "-"
+
+            lines.append(
+                f"  {name:<24} {a['measured_s'] * 1e3:>9.2f} "
+                f"{g('t_model_s', 1e3, '{:.3f}'):>9} "
+                f"{g('roofline_frac', 1.0, '{:.3g}'):>7} "
+                f"{(a.get('bound') or '-'):>6} "
+                f"{g('flops_per_s_achieved', 1e-9):>8} "
+                f"{g('wire_min_bytes_per_s'):>10} "
+                f"{a.get('cost_coverage', 0.0):>5.2f}")
+    costs = summary.get("costs", {})
+    programs = costs.get("programs", {}) if isinstance(costs, dict) else {}
+    if programs:
+        pk = costs.get("peaks", {})
+        lines.append(f"  costs (peaks: {pk.get('source', '?')} "
+                     f"{pk.get('flops_per_s', 0):.3g} FLOP/s, "
+                     f"{pk.get('bytes_per_s', 0):.3g} B/s)")
+        lines.append(f"  {'program':<28} {'calls':>7} {'specs':>6} "
+                     f"{'GFLOP':>9} {'GB acc':>9} {'wire MB':>9}")
+        for name in sorted(programs):
+            p = programs[name]
+            lines.append(
+                f"  {name:<28} {p['calls']:>7} "
+                f"{len(p['specializations']):>6} "
+                f"{p['flops_total'] / 1e9:>9.4g} "
+                f"{p['bytes_total'] / 1e9:>9.4g} "
+                f"{p['wire_bytes'] / 1e6:>9.4g}")
+        degraded = sorted({f"{name}: {s['reason']}"
+                           for name, p in programs.items()
+                           for s in p["specializations"]
+                           if not s["available"] and s.get("reason")})
+        for msg in degraded:
+            lines.append(f"    (cost unavailable) {msg}")
     recompiles = summary.get("recompiles", {})
     if recompiles:
         lines.append(f"  {'program (compiles this session)':<44} {'n':>5}")

@@ -53,12 +53,33 @@ class JsonlSink:
             self._f.close()
 
 
-def load_jsonl(path: str) -> list[dict]:
-    """Read a JSONL event file back into a list of event dicts."""
-    events = []
+class EventList(list):
+    """`load_jsonl`'s return type: a list of event dicts plus a `truncated`
+    flag — True when the file ended mid-record (a crashed writer) and the
+    parsed prefix is everything that survived."""
+    truncated: bool = False
+
+
+def load_jsonl(path: str, *, strict: bool = False) -> EventList:
+    """Read a JSONL event file back into a list of event dicts.
+
+    A malformed FINAL record — the signature of a writer that died
+    mid-`write` — is tolerated: the parsed prefix is returned with
+    `.truncated == True`. Malformed records with valid ones after them are
+    real corruption and still raise (as does any bad record under
+    `strict=True`)."""
+    events = EventList()
     with open(path) as f:
-        for line in f:
-            line = line.strip()
-            if line:
-                events.append(json.loads(line))
+        lines = f.readlines()
+    for i, line in enumerate(lines):
+        stripped = line.strip()
+        if not stripped:
+            continue
+        try:
+            events.append(json.loads(stripped))
+        except json.JSONDecodeError:
+            if strict or any(rest.strip() for rest in lines[i + 1:]):
+                raise
+            events.truncated = True
+            break
     return events

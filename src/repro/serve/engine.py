@@ -189,18 +189,23 @@ class Engine:
             return                       # rebuilt lazily on next admission
         full = decode_lib.expand_state(self.cfg, entry.state,
                                        self.config.max_seq)
+        more_arr = jnp.asarray(more[None, :])
+        obs_lib.observe_program_call("serve.extend", self._extend,
+                                     (self.params, full, more_arr))
         with obs_lib.span("serve.prefix_extend", prefix_id=prefix_id,
                           new_tokens=int(more.shape[0])):
-            _, full = self._extend(self.params, full,
-                                   jnp.asarray(more[None, :]))
+            _, full = self._extend(self.params, full, more_arr)
         self.prefix_cache.put(prefix_id, joined,
                               decode_lib.extract_slot(full, 0))
 
     def _prefill_prefix(self, prefix_id: str) -> prefixcache_lib.PrefixEntry:
         toks = self._prefixes[prefix_id]
+        toks_arr = jnp.asarray(toks[None, :])
+        obs_lib.observe_program_call("serve.prefill", self._prefill,
+                                     (self.params, toks_arr))
         with obs_lib.span("serve.prefill", prefix_id=prefix_id,
                           prompt_len=int(toks.shape[0])):
-            _, state1 = self._prefill(self.params, jnp.asarray(toks[None, :]))
+            _, state1 = self._prefill(self.params, toks_arr)
         return self.prefix_cache.put(prefix_id, toks,
                                      decode_lib.extract_slot(state1, 0))
 
@@ -247,6 +252,9 @@ class Engine:
                               occupancy / self.config.slots)
         if occupancy == 0:
             return
+        obs_lib.observe_program_call(
+            "serve.decode_step", self._step,
+            (self.params, self.state, self.last_token))
         with obs_lib.span("serve.decode_step", occupancy=occupancy):
             logits, self.state = self._step(self.params, self.state,
                                             self.last_token)
@@ -295,6 +303,10 @@ class Engine:
                 entry = self._prefill_prefix(req.prefix_id)
             else:
                 req.admission = "prefix_hit"
+            obs_lib.observe_program_call(
+                "serve.admit_prefix", self._admit_prefix,
+                (self.params, self.state, entry.state, req.prompt,
+                 slot_idx))
             with obs_lib.span("serve.admit_prefix", slot=slot,
                               prompt_len=len(req.prompt),
                               admission=req.admission):
@@ -303,6 +315,9 @@ class Engine:
                     slot_idx)
         else:
             req.admission = "cold"
+            obs_lib.observe_program_call(
+                "serve.admit_cold", self._admit_cold,
+                (self.params, self.state, req.prompt, slot_idx))
             with obs_lib.span("serve.admit_cold", slot=slot,
                               prompt_len=len(req.prompt)):
                 self.state, logits1 = self._admit_cold(

@@ -13,7 +13,7 @@ from repro.kernels import ops
 from repro.models import model as model_lib
 from repro.obs import core as obs
 from repro.obs import recompile, report, trace as trace_lib
-from repro.obs.sinks import MemorySink, load_jsonl
+from repro.obs.sinks import EventList, MemorySink, load_jsonl
 from repro.serve import Engine, Request, ServeConfig
 
 
@@ -271,3 +271,116 @@ def test_scheduler_tokens_identical_and_metrics_present():
     reasons = {e["attrs"]["reason"] for e in o.memory_events()
                if e["name"] == "serve.requests"}
     assert reasons <= {"eos", "budget", "max_seq"} and reasons
+
+
+# ---------------------------------------------------------------------------
+# truncated JSONL tolerance
+# ---------------------------------------------------------------------------
+def _write_events_jsonl(path, n=3):
+    with open(path, "w") as f:
+        for i in range(n):
+            f.write(json.dumps({"type": "counter", "name": f"c{i}",
+                                "ts": float(i), "value": 1.0}) + "\n")
+
+
+def test_load_jsonl_truncated_final_line(tmp_path):
+    """A writer that died mid-write leaves a torn last record: the parsed
+    prefix comes back with truncated=True instead of an exception."""
+    path = str(tmp_path / "torn.jsonl")
+    _write_events_jsonl(path)
+    with open(path, "a") as f:
+        f.write('{"type": "counter", "name": "c3", "ts": 3.0, "val')
+    events = load_jsonl(path)
+    assert isinstance(events, EventList) and events.truncated is True
+    assert [e["name"] for e in events] == ["c0", "c1", "c2"]
+    with pytest.raises(json.JSONDecodeError):
+        load_jsonl(path, strict=True)
+
+
+def test_load_jsonl_midfile_corruption_still_raises(tmp_path):
+    """A bad record with valid records AFTER it is corruption, not a torn
+    tail — that must keep raising."""
+    path = str(tmp_path / "corrupt.jsonl")
+    _write_events_jsonl(path, n=1)
+    with open(path, "a") as f:
+        f.write('{"broken": \n')
+        f.write(json.dumps({"type": "counter", "name": "after",
+                            "ts": 9.0, "value": 1.0}) + "\n")
+    with pytest.raises(json.JSONDecodeError):
+        load_jsonl(path)
+
+
+def test_load_jsonl_intact_file_not_truncated(tmp_path):
+    path = str(tmp_path / "ok.jsonl")
+    _write_events_jsonl(path)
+    events = load_jsonl(path)
+    assert events.truncated is False and len(events) == 3
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace under interleaved spans + multiple counter tracks
+# ---------------------------------------------------------------------------
+def test_chrome_trace_interleaved_spans_and_counter_tracks(tmp_path):
+    path = str(tmp_path / "trace.json")
+    o = obs.enable(trace=path)
+    with obs.span("outer"):
+        # interleaved (not properly nested) spans: enter a, enter b,
+        # exit a, exit b — the exporter must still produce a valid trace
+        a = o.span("stream.a")
+        b = o.span("stream.b")
+        a.__enter__()
+        b.__enter__()
+        for i in range(4):
+            obs.counter("track.bytes", 128 * (i + 1))
+            obs.gauge("track.depth", i)
+        a.__exit__(None, None, None)
+        b.__exit__(None, None, None)
+    obs.disable()
+
+    assert trace_lib.validate_trace(path) > 0
+    doc = json.load(open(path))
+    events = doc["traceEvents"]
+    span_names = {e["name"] for e in events if e["ph"] == "X"}
+    assert {"outer", "stream.a", "stream.b"} <= span_names
+    # each metric name is its own counter track; samples must be
+    # monotonically timestamped within a track (Perfetto requirement)
+    tracks: dict = {}
+    for e in events:
+        if e["ph"] == "C":
+            tracks.setdefault(e["name"], []).append(e["ts"])
+    assert {"track.bytes", "track.depth"} <= set(tracks)
+    for name, tss in tracks.items():
+        assert tss == sorted(tss), f"counter track {name} not monotonic"
+    assert len(tracks["track.bytes"]) == 4
+
+
+# ---------------------------------------------------------------------------
+# summary: p99 + deterministic ordering
+# ---------------------------------------------------------------------------
+def test_hist_summary_includes_p99():
+    o = obs.enable()
+    for v in range(101):                         # 0..100: ranks land exactly
+        obs.histogram("lat", float(v))
+    obs.disable()
+    h = o.summary()["hists"]["lat"]
+    assert h["p50"] == 50.0
+    assert h["p95"] == 95.0
+    assert h["p99"] == 99.0
+    assert h["max"] == 100.0
+
+
+def test_summary_ordering_is_deterministic():
+    """Every per-name table in the summary is key-sorted, so JSON payloads
+    diff cleanly run to run regardless of emission order."""
+    o = obs.enable()
+    for name in ("zeta", "alpha", "mid"):
+        obs.counter(name, 1)
+        obs.gauge("g." + name, 1.0)
+        obs.histogram("h." + name, 1.0)
+        with obs.span("s." + name):
+            pass
+    obs.disable()
+    s = o.summary()
+    for table in ("counters", "gauges", "hists", "spans", "recompiles"):
+        keys = list(s[table])
+        assert keys == sorted(keys), f"{table} not sorted"

@@ -89,6 +89,20 @@ def test_federation_bit_exact_and_no_extra_recompiles(backend):
         hist_off["wire_bytes"])
     assert "fed.round" in s["spans"]
 
+    # PR-10 contract: the cost model captured the round program, and
+    # reading the snapshot touches no jit cache (counts pinned around it)
+    base = recompile.counts()
+    snap = o.costs()
+    assert recompile.counts() == base
+    prog_name = "fed.round.cohort" if backend == "vmap" else "fed.round.mesh"
+    prog = snap["programs"][prog_name]
+    assert prog["calls"] > 0 and prog["wire_bytes"] > 0
+    for spec in prog["specializations"]:      # cost analysis may degrade
+        assert spec["available"] or spec["reason"]   # ... but never crash
+    attrib = s["spans"]["fed.clients.compute"]["attrib"]
+    assert attrib["calls_observed"] >= prog["calls"]
+    assert attrib["wire_min_bytes"] >= prog["wire_bytes"]
+
 
 def test_federation_run_obs_argument_scopes_session():
     """`Federation.run(obs=...)` instruments exactly that run, without a
@@ -154,6 +168,16 @@ def test_serve_engine_bit_exact_and_no_extra_recompiles():
     assert "serve.decode_step" in s["spans"]
     assert "serve.admit_prefix" in s["spans"]
 
+    base = recompile.counts()
+    snap = o.costs()
+    assert recompile.counts() == base
+    decode = snap["programs"]["serve.decode_step"]
+    assert decode["calls"] > 0
+    for spec in decode["specializations"]:
+        assert spec["available"] or spec["reason"]
+    assert {"serve.prefill", "serve.admit_prefix",
+            "serve.admit_cold"} <= set(snap["programs"])
+
 
 def test_dist_step_bit_exact_and_no_extra_recompiles(mesh):
     cfg = configs.get_reduced("llama3.2-3b")
@@ -189,3 +213,13 @@ def test_dist_step_bit_exact_and_no_extra_recompiles(mesh):
     assert s["counters"]["dist.steps"]["total"] == 2.0
     assert s["counters"]["dist.payload_bytes"]["total"] > 0
     assert "dist.step" in s["spans"]
+
+    base = recompile.counts()
+    snap = o.costs()
+    assert recompile.counts() == base
+    prog = snap["programs"]["dist.step"]
+    assert prog["calls"] == 2 and prog["wire_bytes"] > 0
+    for spec in prog["specializations"]:
+        assert spec["available"] or spec["reason"]
+    attrib = s["spans"]["dist.step"]["attrib"]
+    assert attrib["calls_observed"] == 2

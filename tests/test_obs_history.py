@@ -1,0 +1,265 @@
+"""Benchmark history + the regression sentinel.
+
+The acceptance case: a synthetic ~2x slowdown against a healthy baseline
+must produce a finding, and `benchmarks.run --check-regressions` must turn
+it into exit code 2 (and back to 0 under --regress-report-only).
+"""
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import run as bench_run               # noqa: E402
+from repro.obs import history, regress                # noqa: E402
+
+
+def _payload(seconds=1.0, *, tiny=True, tput=None, repeat=None,
+             ok=True, directions=None):
+    rec = {"name": "fed", "ok": ok, "seconds": seconds,
+           "headline": {"rate_bits": 4.0, "note": "text", "flag": True},
+           "repeat_seconds": repeat, "directions": directions}
+    if tput is not None:
+        rec["headline"]["tput"] = tput
+    return {"schema_version": 3, "tiny": tiny,
+            "env": {"python": "3.11.8", "jax": "0.4.37", "jaxlib": "0.4.36",
+                    "backend": "cpu", "device_kind": "cpu",
+                    "device_count": 8, "repro_force_pallas": None,
+                    "git_sha": "abc123", "git_dirty": False},
+            "failed": [] if ok else ["fed"], "benchmarks": [rec]}
+
+
+def _history_rows(values, **kw):
+    rows = []
+    for v in values:
+        rows.extend(history.records_from_payload(_payload(v, **kw)))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# records_from_payload
+# ---------------------------------------------------------------------------
+def test_records_flatten_seconds_and_numeric_headlines():
+    recs = history.records_from_payload(_payload(1.5, repeat=[1.4, 1.5, 1.6]))
+    by_metric = {r["metric"]: r for r in recs}
+    # numeric headline fields flatten; strings and bools don't
+    assert set(by_metric) == {"seconds", "headline.rate_bits"}
+    sec = by_metric["seconds"]
+    assert sec["value"] == 1.5 and sec["direction"] == "lower"
+    assert sec["repeat_values"] == [1.4, 1.5, 1.6]
+    assert sec["git_sha"] == "abc123" and sec["git_dirty"] is False
+    assert sec["blessed"] is False and sec["payload_schema_version"] == 3
+    # headline metrics record but stay ungated without a hint
+    assert by_metric["headline.rate_bits"]["direction"] is None
+    assert by_metric["headline.rate_bits"]["repeat_values"] is None
+
+
+def test_directions_hint_gates_headline_metric():
+    recs = history.records_from_payload(
+        _payload(1.0, tput=120.0, directions={"tput": "higher"}))
+    tput = next(r for r in recs if r["metric"] == "headline.tput")
+    assert tput["direction"] == "higher"
+
+
+def test_v2_payload_still_flattens():
+    p = _payload(2.0)
+    p["schema_version"] = 2
+    for k in ("git_sha", "git_dirty"):
+        del p["env"][k]
+    recs = history.records_from_payload(p)
+    sec = next(r for r in recs if r["metric"] == "seconds")
+    assert sec["value"] == 2.0 and sec["git_sha"] is None
+    assert sec["payload_schema_version"] == 2
+
+
+# ---------------------------------------------------------------------------
+# fingerprint
+# ---------------------------------------------------------------------------
+def test_fingerprint_sensitivity():
+    env = _payload()["env"]
+    base = history.env_fingerprint(env, tiny=True)
+    assert history.env_fingerprint(env, tiny=True) == base
+    assert history.env_fingerprint(env, tiny=False) != base
+    bumped = dict(env, jax="0.5.0")
+    assert history.env_fingerprint(bumped, tiny=True) != base
+    # non-comparability keys (hostname-ish noise) don't split the baseline
+    noisy = dict(env, platform="Linux-whatever", hostname="runner-42")
+    assert history.env_fingerprint(noisy, tiny=True) == base
+
+
+# ---------------------------------------------------------------------------
+# append / load
+# ---------------------------------------------------------------------------
+def test_append_load_roundtrip(tmp_path):
+    path = str(tmp_path / "hist.jsonl")
+    assert history.load(path) == []                  # missing file: empty
+    rows = _history_rows([1.0, 1.1])
+    assert history.append(path, rows) == len(rows)
+    assert history.append(path, []) == 0
+    loaded = history.load(path)
+    assert [r["value"] for r in loaded if r["metric"] == "seconds"] == \
+        [1.0, 1.1]
+    assert loaded.truncated is False
+
+
+def test_load_tolerates_truncated_final_line(tmp_path):
+    path = str(tmp_path / "hist.jsonl")
+    history.append(path, _history_rows([1.0]))
+    with open(path, "a") as f:
+        f.write('{"schema_version": 1, "benchmark": "fed", "metr')
+    loaded = history.load(path)
+    assert loaded.truncated is True
+    assert [r["value"] for r in loaded if r["metric"] == "seconds"] == [1.0]
+
+
+def test_load_skips_future_schema_and_junk(tmp_path):
+    path = str(tmp_path / "hist.jsonl")
+    with open(path, "w") as f:
+        f.write(json.dumps({"schema_version": history.HISTORY_SCHEMA_VERSION
+                            + 1, "benchmark": "fed", "metric": "seconds",
+                            "value": 9.9}) + "\n")
+        f.write(json.dumps({"benchmark": "fed"}) + "\n")   # missing keys
+        f.write(json.dumps(["not", "a", "dict"]) + "\n")
+        f.write(json.dumps({"schema_version": 1, "benchmark": "fed",
+                            "metric": "seconds", "value": 1.0}) + "\n")
+    loaded = history.load(path)
+    assert [r["value"] for r in loaded] == [1.0]
+
+
+# ---------------------------------------------------------------------------
+# the sentinel
+# ---------------------------------------------------------------------------
+def test_sentinel_detects_2x_slowdown():
+    hist = _history_rows([1.0, 0.98, 1.02, 1.01, 0.99])
+    result = regress.check(hist, history.records_from_payload(_payload(2.0)))
+    assert result["checked"] == 1
+    assert len(result["findings"]) == 1
+    f = result["findings"][0]
+    assert f["benchmark"] == "fed" and f["metric"] == "seconds"
+    assert f["ratio"] == pytest.approx(2.0, rel=0.05)
+    assert "fed/seconds" in regress.render(result)
+    assert regress.worst(result) is f
+
+
+def test_sentinel_quiet_on_small_drift():
+    hist = _history_rows([1.0, 0.98, 1.02, 1.01, 0.99])
+    result = regress.check(hist, history.records_from_payload(_payload(1.05)))
+    assert result["checked"] == 1 and result["findings"] == []
+    assert regress.worst(result) is None
+
+
+def test_sentinel_direction_higher():
+    hints = {"directions": {"tput": "higher"}}
+    hist = _history_rows([1.0] * 4, tput=100.0, **hints)
+    drop = history.records_from_payload(_payload(1.0, tput=40.0, **hints))
+    gain = history.records_from_payload(_payload(1.0, tput=200.0, **hints))
+    found = regress.check(hist, drop)["findings"]
+    assert [f["metric"] for f in found] == ["headline.tput"]
+    assert regress.check(hist, gain)["findings"] == []
+
+
+def test_sentinel_noise_floor_suppresses():
+    hist = _history_rows([1.0, 1.0, 1.0, 1.0])
+    noisy = history.records_from_payload(
+        _payload(1.5, repeat=[0.7, 1.5, 2.2]))     # sigma ~0.75 → huge floor
+    result = regress.check(hist, noisy)
+    assert result["findings"] == []
+    calm = history.records_from_payload(
+        _payload(1.5, repeat=[1.49, 1.5, 1.51]))
+    assert len(regress.check(hist, calm)["findings"]) == 1
+
+
+def test_bless_restarts_baseline_window():
+    fast = _history_rows([1.0] * 5)
+    slow = _history_rows([2.0] * 3)
+    current = history.records_from_payload(_payload(2.0))
+    # unblessed, the old fast rows poison the baseline: 2.0 alarms
+    assert regress.check(fast + slow, current)["findings"]
+    # blessing the first slow run restarts the window there: 2.0 is normal
+    blessed = copy.deepcopy(slow)
+    for r in blessed[:2]:                 # first run's records (2 metrics)
+        r["blessed"] = True
+    assert regress.check(fast + blessed, current)["findings"] == []
+
+
+def test_sentinel_skips_thin_history_failed_and_ungated():
+    thin = _history_rows([1.0, 1.0])                 # < min_baseline
+    result = regress.check(thin, history.records_from_payload(_payload(9.0)))
+    assert result["findings"] == [] and result["checked"] == 0
+    why = dict(result["skipped"])
+    assert "insufficient history" in why["fed/seconds"]
+    assert "no direction" in why["fed/headline.rate_bits"]
+    # failed runs are never gated (CI already fails them)
+    hist = _history_rows([1.0] * 5)
+    bad = history.records_from_payload(_payload(9.0, ok=False))
+    assert regress.check(hist, bad)["findings"] == []
+
+
+def test_trimmed_mean_drops_outliers():
+    assert regress.trimmed_mean([1.0, 1.0, 1.0, 1.0, 50.0]) == 1.0
+    assert regress.trimmed_mean([3.0]) == 3.0
+    with pytest.raises(ValueError):
+        regress.trimmed_mean([])
+
+
+def test_failed_history_rows_excluded_from_baseline():
+    ok_rows = _history_rows([1.0] * 3)
+    bad_rows = _history_rows([50.0] * 3, ok=False)
+    result = regress.check(ok_rows + bad_rows,
+                           history.records_from_payload(_payload(1.0)))
+    assert result["checked"] == 1 and result["findings"] == []
+
+
+# ---------------------------------------------------------------------------
+# CLI integration: benchmarks.run --from-json --check-regressions
+# ---------------------------------------------------------------------------
+def _write_cli_fixture(tmp_path, seconds):
+    hist_path = str(tmp_path / "BENCH_history.jsonl")
+    history.append(hist_path, _history_rows([1.0, 0.99, 1.01, 1.0]))
+    payload_path = str(tmp_path / "payload.json")
+    with open(payload_path, "w") as f:
+        json.dump(_payload(seconds), f)
+    return payload_path, hist_path
+
+
+def test_cli_regression_exits_2(tmp_path, capsys):
+    payload_path, hist_path = _write_cli_fixture(tmp_path, 2.0)
+    with pytest.raises(SystemExit) as exc:
+        bench_run.main(["--from-json", payload_path, "--check-regressions",
+                        "--history", hist_path])
+    assert exc.value.code == 2
+    assert "1 regression(s)" in capsys.readouterr().out
+
+
+def test_cli_report_only_and_append(tmp_path, capsys):
+    payload_path, hist_path = _write_cli_fixture(tmp_path, 2.0)
+    before = len(history.load(hist_path))
+    bench_run.main(["--from-json", payload_path, "--check-regressions",
+                    "--regress-report-only", "--append-history",
+                    "--history", hist_path])          # no SystemExit
+    out = capsys.readouterr().out
+    assert "1 regression(s)" in out and "appended" in out
+    after = history.load(hist_path)
+    assert len(after) == before + 2                  # seconds + rate_bits
+
+
+def test_cli_clean_run_checks_quietly(tmp_path, capsys):
+    payload_path, hist_path = _write_cli_fixture(tmp_path, 1.0)
+    bench_run.main(["--from-json", payload_path, "--check-regressions",
+                    "--history", hist_path])
+    assert "0 regression(s)" in capsys.readouterr().out
+
+
+def test_cli_bless_appends_blessed_records(tmp_path):
+    payload_path, hist_path = _write_cli_fixture(tmp_path, 2.0)
+    bench_run.main(["--from-json", payload_path, "--bless",
+                    "--history", hist_path])
+    rows = history.load(hist_path)
+    assert [r["blessed"] for r in rows[-2:]] == [True, True]
+    # next identical run gates against the blessed baseline... which is
+    # too thin (1 run) to alarm — bless really does restart the window
+    result = regress.check(rows, history.records_from_payload(_payload(2.0)))
+    assert result["findings"] == []
